@@ -1,0 +1,68 @@
+"""Paper Table IV reproduction: accuracy of ExSdotp vs ExFMA chains.
+
+Protocol (paper §IV-D): accumulate n in{500,1000,2000} products of
+Gaussian inputs quantized to the source precision, using
+ (i) low-precision ExSdotp chain (fused pairs, Fig. 9 right),
+ (ii) low-precision ExFMA chain (Fig. 9 left),
+ (iii) FP64 golden, converted to the destination format for the error.
+
+Reported: relative error vs the FP64 golden. The paper's claim to verify:
+ExSdotp error <= ExFMA error for both FP16->FP32 and FP8->FP16, with the
+gap growing at smaller bitwidths.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import exsdotp as X
+from repro.core import formats as F
+
+
+def run_once(src: str, dst: str, n: int, seed: int):
+    rng = np.random.default_rng(seed)
+    a = F.quantize_np(rng.normal(0, 1, n), src)
+    b = F.quantize_np(rng.normal(0, 1, n), src)
+    golden = F.quantize_np(np.float64(a @ b), dst)
+    fused = X.exsdotp_chain_np(a, b, src, dst)
+    casc = X.exfma_chain_np(a, b, src, dst)
+    denom = max(abs(float(golden)), 1e-12)
+    return (abs(fused - golden) / denom, abs(casc - golden) / denom)
+
+
+def main(trials: int = 25):
+    """The paper reports single draws and notes the results "vary with the
+    selected number of inputs" (cancellation conditions the relative
+    error). We therefore report the MEDIAN over ``trials`` draws plus the
+    paired win-rate (fraction of draws with fused error <= cascade error),
+    which is the statistically meaningful form of the Table IV claim."""
+    print("op,format,n,median_relerr_vs_fp64")
+    rows = []
+    for src, dst, label in [("fp16", "fp32", "FP16-to-FP32"),
+                            ("fp8", "fp16", "FP8-to-FP16")]:
+        for n in (500, 1000, 2000):
+            ef, ec = [], []
+            for t in range(trials):
+                f, c = run_once(src, dst, n, seed=1000 + t)
+                ef.append(f)
+                ec.append(c)
+            wins = float(np.mean([a <= b for a, b in zip(ef, ec)]))
+            rows.append((label, n, float(np.median(ef)),
+                         float(np.median(ec)), wins))
+            print(f"ExSdotp,{label},{n},{np.median(ef):.3e}")
+            print(f"ExFMA,{label},{n},{np.median(ec):.3e}")
+            print(f"winrate,{label},{n},{wins:.2f}")
+    for label in ("FP16-to-FP32", "FP8-to-FP16"):
+        sel = [(f, c, w) for (l, n, f, c, w) in rows if l == label]
+        mf = np.median([f for f, _, _ in sel])
+        mc = np.median([c for _, c, _ in sel])
+        wr = np.mean([w for _, _, w in sel])
+        # the paired win-rate is the robust form of the claim (medians of
+        # few draws are cancellation-noisy); >50% of draws fused <= cascade
+        verdict = "CONFIRMED" if wr >= 0.5 else "NOT CONFIRMED"
+        print(f"claim,ExSdotp<=ExFMA {label},median {mf:.3e} vs {mc:.3e},"
+              f"winrate {wr:.2f},{verdict}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Serving example: batched prefill + KV-cache decode with request batching.
+
+Simulates a decode server: a queue of variable-length prompts is batched,
+prefilled via per-token cache fill, then decoded in lockstep with greedy
+sampling; reports per-token latency and throughput.
+
+    PYTHONPATH=src python examples/serve_lm.py --batch 4 --new-tokens 16
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.models import build_model
+from repro.serve.decode import make_serve_fns
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=64)
+    args = ap.parse_args()
+
+    cfg = ARCHS[args.arch].reduced()   # CPU-sized variant of the real arch
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    _, serve_step = make_serve_fns(model)
+    step = jax.jit(serve_step)
+
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size,
+                           (args.batch, args.prompt_len))
+    cache = model.init_cache(args.batch, args.max_len)
+
+    # prefill by cache fill (per position; production would use a fused
+    # prefill kernel — same cache layout either way)
+    t0 = time.perf_counter()
+    logits = None
+    for i in range(args.prompt_len):
+        logits, cache = step(params, jnp.asarray(prompts[:, i]), cache)
+    jax.block_until_ready(logits)
+    t_prefill = time.perf_counter() - t0
+
+    toks = []
+    t0 = time.perf_counter()
+    for i in range(args.new_tokens):
+        tok = jnp.argmax(logits, axis=-1)
+        toks.append(np.asarray(tok))
+        logits, cache = step(params, tok, cache)
+    jax.block_until_ready(logits)
+    t_decode = time.perf_counter() - t0
+
+    out = np.stack(toks, 1)
+    print(f"[serve_lm] arch={cfg.name} batch={args.batch}")
+    print(f"  prefill: {args.prompt_len} tok in {t_prefill*1e3:.0f} ms")
+    print(f"  decode : {args.new_tokens} tok in {t_decode*1e3:.0f} ms "
+          f"({args.batch*args.new_tokens/t_decode:.1f} tok/s incl. compile)")
+    print(f"  sample continuation[0]: {out[0][:10]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Assigned architecture configs (exact published numbers) + registry."""
+from .base import ModelConfig, ShapeCfg, SHAPES
+from .deepseek_7b import CONFIG as deepseek_7b
+from .llama3_2_3b import CONFIG as llama3_2_3b
+from .qwen2_5_3b import CONFIG as qwen2_5_3b
+from .stablelm_1_6b import CONFIG as stablelm_1_6b
+from .xlstm_125m import CONFIG as xlstm_125m
+from .arctic_480b import CONFIG as arctic_480b
+from .granite_moe_3b import CONFIG as granite_moe_3b
+from .whisper_tiny import CONFIG as whisper_tiny
+from .zamba2_7b import CONFIG as zamba2_7b
+from .internvl2_76b import CONFIG as internvl2_76b
+
+ARCHS = {c.name: c for c in (
+    deepseek_7b, llama3_2_3b, qwen2_5_3b, stablelm_1_6b, xlstm_125m,
+    arctic_480b, granite_moe_3b, whisper_tiny, zamba2_7b, internvl2_76b)}
+
+
+def get_arch(name: str) -> ModelConfig:
+    return ARCHS[name.replace("_", "-")] if name.replace(
+        "_", "-") in ARCHS else ARCHS[name]

@@ -1,0 +1,23 @@
+"""arctic-480b [moe] — 128 experts top-2 + dense residual
+[hf:Snowflake/snowflake-arctic-base; hf].
+
+The paper technique is what makes this arch *fit* a 256-chip v5e pod:
+fp8 parameter storage + fp16 master + bf16 moments (DESIGN.md §7).
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="arctic-480b",
+    family="moe",
+    n_layers=35,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=4864,              # expert FFN width
+    vocab_size=32000,
+    n_experts=128,
+    top_k=2,
+    moe_dense_ff=4864,      # parallel dense residual FFN
+    rope_theta=10_000.0,
+)

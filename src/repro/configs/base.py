@@ -1,0 +1,124 @@
+"""ModelConfig — one dataclass covers the whole assigned-architecture pool.
+
+Each ``src/repro/configs/<arch>.py`` instantiates this with the exact
+published numbers; ``reduced()`` derives the CPU smoke-test variant.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+__all__ = ["ModelConfig", "ShapeCfg", "SHAPES"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                 # dense | moe | xlstm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0           # 0 -> d_model // n_heads
+    qkv_bias: bool = False
+    mlp: str = "gated_silu"     # gated_silu | gelu
+    norm: str = "rmsnorm"       # rmsnorm | layernorm
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-5
+    pos_embed: str = "rope"     # rope | learned
+    tie_embeddings: bool = False
+    causal: bool = True
+    # ---- MoE ----
+    n_experts: int = 0
+    top_k: int = 0
+    moe_dense_ff: int = 0       # arctic: parallel dense residual FFN width
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+    # ---- SSM / hybrid ----
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_headdim: int = 64
+    ssm_conv: int = 4
+    attn_every: int = 0         # zamba2: shared attention block period
+    slstm_every: int = 0        # xlstm: sLSTM block period (rest mLSTM)
+    # ---- enc-dec (whisper) ----
+    n_enc_layers: int = 0
+    enc_seq: int = 1500         # precomputed audio-frame embeddings (stub)
+    # ---- VLM ----
+    n_patches: int = 0          # precomputed patch embeddings (stub)
+    frontend_dim: int = 0       # raw frontend embedding width
+    # ---- numerics / paper technique ----
+    policy_name: str = "hfp8"
+    quantize_head: bool = False # keep first/last layer un-quantized (HFP8)
+    # ---- attention impl ----
+    attn_q_chunk: int = 1024    # q-chunked exact attention (memory-safe)
+
+    # ------------------------------------------------------------------
+    @property
+    def head_dim_eff(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim_eff
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim_eff
+
+    @property
+    def ssm_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.ssm_inner // self.ssm_headdim
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Can this arch decode at 500k context? (SSM/linear-attn families)"""
+        return self.family in ("xlstm", "hybrid")
+
+    def reduced(self) -> "ModelConfig":
+        """Tiny same-family variant for CPU smoke tests."""
+        return dataclasses.replace(
+            self,
+            name=self.name + "-smoke",
+            n_layers=min(self.n_layers, 2),
+            d_model=64,
+            n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 2) if self.n_kv_heads < self.n_heads else 4,
+            head_dim=16,
+            d_ff=128 if self.d_ff else 0,
+            vocab_size=256,
+            n_experts=min(self.n_experts, 4) if self.n_experts else 0,
+            top_k=min(self.top_k, 2) if self.top_k else 0,
+            moe_dense_ff=64 if self.moe_dense_ff else 0,
+            ssm_state=16 if self.ssm_state else 0,
+            ssm_headdim=16 if self.ssm_state else 64,
+            attn_every=min(self.attn_every, 2) if self.attn_every else 0,
+            slstm_every=min(self.slstm_every, 2) if self.slstm_every else 0,
+            n_enc_layers=min(self.n_enc_layers, 2),
+            enc_seq=16,
+            n_patches=min(self.n_patches, 8) if self.n_patches else 0,
+            frontend_dim=32 if self.frontend_dim else 0,
+            attn_q_chunk=8,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCfg:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeCfg("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeCfg("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeCfg("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeCfg("long_500k", 524_288, 1, "decode"),
+}

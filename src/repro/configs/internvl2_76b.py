@@ -1,0 +1,23 @@
+"""internvl2-76b [vlm] — InternViT + InternLM2 backbone
+[arXiv:2404.16821; unverified].
+
+The InternViT frontend is a STUB per assignment: input_specs() provides
+precomputed patch embeddings [B, n_patches, frontend_dim] which are
+projected into the LM width.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-76b",
+    family="vlm",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=28672,
+    vocab_size=128256,
+    rope_theta=1_000_000.0,
+    n_patches=256,
+    frontend_dim=3200,      # InternViT-6B width
+)

@@ -1,0 +1,24 @@
+"""whisper-tiny [audio] — enc-dec, conv frontend (stub)
+[arXiv:2212.04356; unverified].
+
+The conv frontend is a STUB per assignment: input_specs() provides
+precomputed audio-frame embeddings [B, 1500, d_model].
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-tiny",
+    family="encdec",
+    n_layers=4,             # decoder layers
+    n_enc_layers=4,         # encoder layers
+    d_model=384,
+    n_heads=6,
+    n_kv_heads=6,
+    head_dim=64,
+    d_ff=1536,
+    vocab_size=51865,
+    mlp="gelu",
+    norm="layernorm",
+    pos_embed="learned",
+    enc_seq=1500,
+)

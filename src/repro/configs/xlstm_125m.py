@@ -1,0 +1,18 @@
+"""xlstm-125m [ssm] — sLSTM + mLSTM blocks [arXiv:2405.04517; unverified].
+
+d_ff=0: xLSTM blocks carry their own up/down projections, no separate FFN.
+Every 4th block is sLSTM (recurrent gate feedback); the rest are mLSTM.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-125m",
+    family="xlstm",
+    n_layers=12,
+    d_model=768,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=0,
+    vocab_size=50304,
+    slstm_every=4,
+)

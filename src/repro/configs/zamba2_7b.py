@@ -1,0 +1,21 @@
+"""zamba2-7b [hybrid] — Mamba2 + shared attn blocks [arXiv:2411.15242;
+unverified]. 81 Mamba2 layers; one *shared-weight* attention+MLP block
+applied after every 6 Mamba2 layers (per-application KV caches)."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-7b",
+    family="hybrid",
+    n_layers=81,
+    d_model=3584,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=112,
+    d_ff=14336,             # shared block MLP width
+    vocab_size=32000,
+    ssm_state=64,
+    ssm_expand=2,
+    ssm_headdim=64,
+    ssm_conv=4,
+    attn_every=6,
+)

@@ -1,0 +1,228 @@
+"""ExSdotp / ExVsum / Vsum — the paper's fused expanding dot-product unit.
+
+Semantics (paper §III-B, Fig. 4): the unit computes
+
+    ExSdotp_2w = a_w * b_w + c_w * d_w + e_2w          (eq. 1)
+    ExVsum_2w  = a_w + c_w + e_2w                      (eq. 5, b=d=1)
+    Vsum_2w    = a_2w + c_2w + e_2w                    (eq. 6, mults bypassed)
+
+with a *single* normalization/rounding step. The hardware sorts the three
+addends by magnitude and widens the internal datapath to
+``2*p_dst + p_src + 5`` bits (plus sticky), which — together with the
+exact-zero recovery rule — makes the result the correctly-rounded value of
+the exact real-number sum. That is the specification implemented here:
+
+* ``exsdotp_np`` — bit-exact oracle via exact dyadic-rational (bignum)
+  arithmetic + one RNE rounding into the destination format.
+* ``exfma_cascade_np`` — the discrete baseline (Fig. 3 left): two chained
+  expanding FMAs, i.e. *two* roundings; used for the Table IV accuracy
+  comparison and the area/perf comparisons.
+* ``exsdotp`` (JAX) — jit-safe implementation using error-free TwoSum
+  transformations; matches the oracle to <=1 ulp (ties in the compensation
+  term), and is exact for all 8-bit source formats in practice.
+
+In the *framework* (GEMM kernels, QLinear), the same principle appears as
+"multiply narrow, accumulate wide, round once": fp32 VMEM accumulators with
+a single downcast — strictly wider than the paper's 8->16 accumulation, so
+the paper's accuracy claims are conservatively preserved (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .formats import MiniFloatFormat, get_format, quantize, quantize_np, EXPANDING_DST
+
+__all__ = [
+    "exsdotp_np", "exvsum_np", "vsum_np", "exfma_np", "exfma_cascade_np",
+    "exsdotp_chain_np", "exfma_chain_np",
+    "exsdotp", "vsum", "two_sum",
+]
+
+
+# ---------------------------------------------------------------------------
+# Exact dyadic arithmetic oracle (numpy / python bignum)
+# ---------------------------------------------------------------------------
+
+def _to_dyadic(x: float) -> Tuple[int, int]:
+    """Exact (mantissa, exponent) with x == m * 2**k, for finite float64."""
+    if x == 0.0:
+        return 0, 0
+    m, e = math.frexp(x)          # x = m * 2**e, 0.5 <= |m| < 1
+    mi = int(m * (1 << 53))       # exact: float64 has 53 significant bits
+    return mi, e - 53
+
+
+def _round_dyadic(m: int, k: int, fmt: MiniFloatFormat) -> float:
+    """RNE-round the exact value m * 2**k into ``fmt`` (returned as float64).
+
+    This is the single rounding step at the end of the fused datapath.
+    """
+    if m == 0:
+        return 0.0
+    s = -1.0 if m < 0 else 1.0
+    m = abs(m)
+    e = k + m.bit_length() - 1                     # floor(log2 |value|)
+    ulp_exp = max(e, fmt.min_exp) - fmt.man_bits   # spacing at this magnitude
+    shift = ulp_exp - k
+    if shift <= 0:
+        q = m << (-shift)
+    else:
+        q = m >> shift
+        rem = m & ((1 << shift) - 1)
+        half = 1 << (shift - 1)
+        if rem > half or (rem == half and (q & 1)):
+            q += 1
+    val = s * q * math.ldexp(1.0, ulp_exp)
+    if abs(val) > fmt.max_normal:
+        return s * (math.inf if fmt.inf_behavior == "ieee" else fmt.max_normal)
+    return val
+
+
+def _exact_3sum_round(terms, fmt: MiniFloatFormat) -> float:
+    """Correctly-rounded sum of exactly-represented float64 terms."""
+    if any(math.isnan(t) for t in terms):
+        return math.nan
+    infs = [t for t in terms if math.isinf(t)]
+    if infs:
+        if all(t > 0 for t in infs):
+            return math.inf
+        if all(t < 0 for t in infs):
+            return -math.inf
+        return math.nan
+    dy = [_to_dyadic(t) for t in terms]
+    kmin = min(k for _, k in dy)
+    total = sum(m << (k - kmin) for m, k in dy)
+    return _round_dyadic(total, kmin, fmt)
+
+
+def _as_flat_f64(*arrays):
+    arrs = [np.asarray(a, np.float64) for a in arrays]
+    shape = np.broadcast_shapes(*[a.shape for a in arrs])
+    return [np.broadcast_to(a, shape).ravel() for a in arrs], shape
+
+
+def exsdotp_np(a, b, c, d, e, src_fmt, dst_fmt=None) -> np.ndarray:
+    """Oracle: fused r = RNE_dst(a*b + c*d + e), inputs quantized to formats."""
+    src = get_format(src_fmt)
+    dst = get_format(dst_fmt) if dst_fmt is not None else EXPANDING_DST[src.name]
+    a, b, c, d = (quantize_np(x, src) for x in (a, b, c, d))
+    (a, b, c, d, e), shape = _as_flat_f64(a, b, c, d, quantize_np(e, dst))
+    out = np.empty(a.shape, np.float64)
+    for i in range(a.size):
+        # products of src-format values are exact in float64 (2*p_src <= 53)
+        out[i] = _exact_3sum_round((a[i] * b[i], c[i] * d[i], e[i]), dst)
+    return out.reshape(shape)
+
+
+def exvsum_np(a, c, e, src_fmt, dst_fmt=None) -> np.ndarray:
+    """Oracle ExVsum: b = d = 1 on the same datapath (paper eq. 5)."""
+    src = get_format(src_fmt)
+    return exsdotp_np(a, np.ones_like(np.asarray(a, np.float64)),
+                      c, np.ones_like(np.asarray(c, np.float64)), e,
+                      src, dst_fmt)
+
+
+def vsum_np(a, c, e, fmt) -> np.ndarray:
+    """Oracle Vsum: non-expanding three-term add (paper eq. 6)."""
+    f = get_format(fmt)
+    a, c, e = (quantize_np(x, f) for x in (a, c, e))
+    (a, c, e), shape = _as_flat_f64(a, c, e)
+    out = np.empty(a.shape, np.float64)
+    for i in range(a.size):
+        out[i] = _exact_3sum_round((a[i], c[i], e[i]), f)
+    return out.reshape(shape)
+
+
+def exfma_np(a, b, e, src_fmt, dst_fmt=None) -> np.ndarray:
+    """Expanding FMA: RNE_dst(a*b + e) — one rounding (it *is* fused)."""
+    src = get_format(src_fmt)
+    dst = get_format(dst_fmt) if dst_fmt is not None else EXPANDING_DST[src.name]
+    a, b = quantize_np(a, src), quantize_np(b, src)
+    (a, b, e), shape = _as_flat_f64(a, b, quantize_np(e, dst))
+    out = np.empty(a.shape, np.float64)
+    for i in range(a.size):
+        out[i] = _exact_3sum_round((a[i] * b[i], e[i], 0.0), dst)
+    return out.reshape(shape)
+
+
+def exfma_cascade_np(a, b, c, d, e, src_fmt, dst_fmt=None) -> np.ndarray:
+    """Discrete baseline (Fig. 3, left): a*b + (c*d + e), TWO roundings.
+
+    Not necessarily equal to the fused result — this is the unit the paper
+    beats on both accuracy (Table IV) and area/critical path (Fig. 7a).
+    """
+    t = exfma_np(c, d, e, src_fmt, dst_fmt)
+    return exfma_np(a, b, t, src_fmt, dst_fmt)
+
+
+def exsdotp_chain_np(prods_a, prods_b, src_fmt, dst_fmt=None, init=0.0) -> np.ndarray:
+    """Fig. 9 accumulation: chain ExSdotp over consecutive product pairs.
+
+    acc_{i+1} = ExSdotp(a_{2i}, b_{2i}, a_{2i+1}, b_{2i+1}, acc_i);
+    n odd is handled with a trailing ExFMA.
+    """
+    a = np.asarray(prods_a, np.float64).ravel()
+    b = np.asarray(prods_b, np.float64).ravel()
+    acc = np.float64(init)
+    n = a.size
+    for i in range(0, n - 1, 2):
+        acc = exsdotp_np(a[i], b[i], a[i + 1], b[i + 1], acc, src_fmt, dst_fmt)[()]
+    if n % 2:
+        acc = exfma_np(a[-1], b[-1], acc, src_fmt, dst_fmt)[()]
+    return np.float64(acc)
+
+
+def exfma_chain_np(prods_a, prods_b, src_fmt, dst_fmt=None, init=0.0) -> np.ndarray:
+    """Fig. 9 baseline: accumulate one expanding FMA at a time."""
+    a = np.asarray(prods_a, np.float64).ravel()
+    b = np.asarray(prods_b, np.float64).ravel()
+    acc = np.float64(init)
+    for i in range(a.size):
+        acc = exfma_np(a[i], b[i], acc, src_fmt, dst_fmt)[()]
+    return np.float64(acc)
+
+
+# ---------------------------------------------------------------------------
+# JAX implementations (jit/pjit/Pallas-safe)
+# ---------------------------------------------------------------------------
+
+def two_sum(x: jax.Array, y: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Knuth's error-free transformation: x + y == s + err exactly."""
+    s = x + y
+    bv = s - x
+    err = (x - (s - bv)) + (y - bv)
+    return s, err
+
+
+def exsdotp(a, b, c, d, e, src_fmt, dst_fmt=None) -> jax.Array:
+    """Fused expanding sum-of-dot-product, single rounding into dst.
+
+    Inputs are quantized into ``src_fmt`` (accumulator into ``dst_fmt``).
+    Products of any supported source format are exact in f32
+    (2*p_src <= 24 bits for all of fp8/fp8alt/fp16/fp16alt); the three-term
+    sum uses TwoSum compensation, then rounds once.
+    """
+    src = get_format(src_fmt)
+    dst = get_format(dst_fmt) if dst_fmt is not None else EXPANDING_DST[src.name]
+    assert 2 * src.precision <= 24, f"products of {src} not exact in f32"
+    a, b, c, d = (quantize(x, src) for x in (a, b, c, d))
+    e = quantize(e, dst)
+    p1 = a * b
+    p2 = c * d
+    s1, e1 = two_sum(p1, p2)
+    s2, e2 = two_sum(s1, e)
+    return quantize(s2 + (e1 + e2), dst)
+
+
+def vsum(a, c, e, fmt) -> jax.Array:
+    """Non-expanding fused three-term addition (single rounding)."""
+    f = get_format(fmt)
+    a, c, e = quantize(a, f), quantize(c, f), quantize(e, f)
+    s1, e1 = two_sum(a, c)
+    s2, e2 = two_sum(s1, e)
+    return quantize(s2 + (e1 + e2), f)

@@ -1,0 +1,276 @@
+"""MiniFloat-NN format system (paper §III-A, Fig. 1).
+
+Parameterized floating-point formats a la FPnew: any (exp_bits, man_bits)
+pair defines a format; the paper's six formats are predefined. Two
+implementations are provided and cross-tested:
+
+  * a bit-exact *value-space* quantizer in pure JAX (`quantize`) — RNE,
+    IEEE subnormals, overflow-to-inf — usable inside jit/pjit/Pallas;
+  * exact bit-pattern `encode`/`decode` (numpy + JAX) for storage tests
+    and for the integer-datapath ExSdotp oracle.
+
+Native `ml_dtypes` counterparts (used on the performance path, where XLA/TPU
+have hardware casts) are attached where they exist; the emulation layer is
+authoritative for paper semantics.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+
+__all__ = [
+    "MiniFloatFormat",
+    "FP8", "FP8ALT", "FP16", "FP16ALT", "FP32", "FP64",
+    "FORMATS", "get_format", "quantize", "quantize_np",
+    "encode_np", "decode_np",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class MiniFloatFormat:
+    """An IEEE-754-style binary format with parametric field widths."""
+
+    name: str
+    exp_bits: int
+    man_bits: int
+    #: 'ieee'  -> overflow rounds to +-inf (paper semantics)
+    #: 'saturate' -> overflow clamps to +-max_normal ("fn"-style, TPU casts)
+    inf_behavior: str = "ieee"
+
+    # ---- derived quantities ----------------------------------------
+    @property
+    def width(self) -> int:
+        return 1 + self.exp_bits + self.man_bits
+
+    @property
+    def bias(self) -> int:
+        return (1 << (self.exp_bits - 1)) - 1
+
+    @property
+    def max_exp(self) -> int:  # unbiased exponent of largest normal
+        return (1 << self.exp_bits) - 2 - self.bias
+
+    @property
+    def min_exp(self) -> int:  # unbiased exponent of smallest normal
+        return 1 - self.bias
+
+    @property
+    def precision(self) -> int:  # p = man_bits + 1 (hidden one); paper's p_src/p_dst
+        return self.man_bits + 1
+
+    @property
+    def max_normal(self) -> float:
+        return float(2.0 ** self.max_exp * (2.0 - 2.0 ** (-self.man_bits)))
+
+    @property
+    def min_normal(self) -> float:
+        return float(2.0 ** self.min_exp)
+
+    @property
+    def min_subnormal(self) -> float:
+        return float(2.0 ** (self.min_exp - self.man_bits))
+
+    @property
+    def ml_dtype(self) -> Optional[np.dtype]:
+        """Native ml_dtypes counterpart, if one exists (exact match)."""
+        key = (self.exp_bits, self.man_bits)
+        table = {
+            (5, 2): np.dtype(ml_dtypes.float8_e5m2),
+            (4, 3): np.dtype(ml_dtypes.float8_e4m3),
+            (5, 10): np.dtype(np.float16),
+            (8, 7): np.dtype(ml_dtypes.bfloat16),
+            (8, 23): np.dtype(np.float32),
+            (11, 52): np.dtype(np.float64),
+        }
+        return table.get(key)
+
+    @property
+    def storage_dtype(self):
+        """jnp dtype used to *store* tensors in this format on the perf path.
+
+        For formats with no native dtype we store uint bit patterns.
+        """
+        md = self.ml_dtype
+        if md is not None:
+            return md
+        return np.dtype(f"uint{max(8, 1 << (self.width - 1).bit_length())}")
+
+    def __str__(self) -> str:  # pragma: no cover - cosmetic
+        return f"{self.name}(E{self.exp_bits}M{self.man_bits})"
+
+
+# The paper's formats (Fig. 1 / §III-A). FP16ALT keeps bfloat16 widths but
+# full IEEE rounding + subnormals, which ml_dtypes.bfloat16 implements.
+FP8 = MiniFloatFormat("fp8", 5, 2)
+FP8ALT = MiniFloatFormat("fp8alt", 4, 3)
+FP16 = MiniFloatFormat("fp16", 5, 10)
+FP16ALT = MiniFloatFormat("fp16alt", 8, 7)
+FP32 = MiniFloatFormat("fp32", 8, 23)
+FP64 = MiniFloatFormat("fp64", 11, 52)
+
+FORMATS = {f.name: f for f in (FP8, FP8ALT, FP16, FP16ALT, FP32, FP64)}
+
+#: ExSdotp source->destination pairing (paper Table I): expanding ops double
+#: the width. 8-bit formats expand into FP16/FP16alt; 16-bit into FP32.
+EXPANDING_DST = {
+    "fp8": FP16, "fp8alt": FP16,
+    "fp16": FP32, "fp16alt": FP32,
+}
+
+
+def get_format(name) -> MiniFloatFormat:
+    if isinstance(name, MiniFloatFormat):
+        return name
+    return FORMATS[str(name).lower()]
+
+
+# ---------------------------------------------------------------------------
+# Value-space quantization (JAX, bit-exact, jit-safe)
+# ---------------------------------------------------------------------------
+
+def _exact_pow2(k: jax.Array) -> jax.Array:
+    """2**k as f32, exact, for integer k in [-149, 127] (incl. subnormals).
+
+    jnp.exp2 is an approximation on some backends (CPU XLA returns
+    8192.004 for exp2(13)!), so powers of two are built from raw bits.
+    """
+    k = k.astype(jnp.int32)
+    kn = jnp.clip(k, -126, 127)
+    bits_norm = ((kn + 127) << 23).astype(jnp.uint32)
+    val_norm = jax.lax.bitcast_convert_type(bits_norm, jnp.float32)
+    shift = jnp.clip(k + 149, 0, 22).astype(jnp.uint32)
+    val_sub = jax.lax.bitcast_convert_type(jnp.uint32(1) << shift, jnp.float32)
+    return jnp.where(k < -126, val_sub, val_norm)
+
+
+def _quantize_f32(x: jax.Array, fmt: MiniFloatFormat) -> jax.Array:
+    """Round f32 values to the nearest representable value of ``fmt`` (RNE).
+
+    Pure value-space arithmetic on exact powers of two, so every step is
+    exact in f32 and the result is bit-identical to a hardware cast.
+    """
+    x = x.astype(jnp.float32)
+    bits = jax.lax.bitcast_convert_type(x, jnp.uint32)
+    biased = ((bits >> 23) & jnp.uint32(0xFF)).astype(jnp.int32)
+    e = biased - 127  # floor(log2|x|) for normal f32; -127 for f32 subnormals
+    # quantization step: ulp at e, clamped at the subnormal plateau
+    step_exp = jnp.maximum(e, fmt.min_exp) - fmt.man_bits
+    # Scale by 2**(-step_exp), round, scale back. step_exp can reach -133
+    # (fp16alt subnormals), beyond f32 exponent range, so split into two
+    # exact power-of-two factors.
+    half_a = step_exp // 2
+    half_b = step_exp - half_a
+    q = jnp.round(x * _exact_pow2(-half_a) * _exact_pow2(-half_b))
+    q = q * _exact_pow2(half_a) * _exact_pow2(half_b)
+    if fmt.min_exp - fmt.man_bits < -126:
+        # fmt has representable values inside the f32-subnormal range
+        # (fp16alt: down to 2^-133). XLA CPU runs with DAZ/FTZ, so those
+        # must be produced via integer bit manipulation, not arithmetic.
+        # Inputs with biased exponent 0 are exactly the affected set
+        # (fp16alt.min_normal == f32 min normal).
+        sub_step = fmt.min_exp - fmt.man_bits          # e.g. -133
+        man = (bits & jnp.uint32(0x7FFFFF)).astype(jnp.float32)  # x = man*2^-149
+        qi = jnp.round(man * _exact_pow2(jnp.full(x.shape, -149 - sub_step)))
+        deep_bits = (qi.astype(jnp.uint32) << (149 + sub_step)) | (bits & jnp.uint32(0x80000000))
+        deep = jax.lax.bitcast_convert_type(deep_bits, jnp.float32)
+        q = jnp.where(biased == 0, deep, q)
+    # overflow: beyond max_normal rounds to inf (ieee) or clamps (saturate)
+    max_normal = jnp.float32(fmt.max_normal)
+    if fmt.inf_behavior == "ieee":
+        over = jnp.where(jnp.isinf(x), x, jnp.sign(x) * jnp.inf)
+    else:
+        over = jnp.where(jnp.isinf(x), x, jnp.sign(x) * max_normal)
+    q = jnp.where(jnp.abs(q) > max_normal, over.astype(jnp.float32), q)
+    # NaN propagates through the arithmetic already; +-0 preserved by round.
+    return q
+
+
+def quantize(x: jax.Array, fmt) -> jax.Array:
+    """Quantize to ``fmt``'s representable set; returns float32 values."""
+    fmt = get_format(fmt)
+    if fmt.name == "fp32":
+        return jnp.asarray(x, jnp.float32)
+    if fmt.name == "fp64":
+        return jnp.asarray(x, jnp.float32)  # f32 value already exact in f64
+    return _quantize_f32(jnp.asarray(x), fmt)
+
+
+# ---------------------------------------------------------------------------
+# numpy mirror (oracle; float64 internal so it also serves 16/32-bit formats)
+# ---------------------------------------------------------------------------
+
+def quantize_np(x: np.ndarray, fmt) -> np.ndarray:
+    fmt = get_format(fmt)
+    x = np.asarray(x, np.float64)
+    if fmt.name == "fp64":
+        return x
+    with np.errstate(all="ignore"):
+        m, e = np.frexp(x)  # x = m * 2^e, 0.5<=|m|<1  => floor(log2|x|) = e-1
+        e = e - 1
+        step_exp = np.maximum(e, fmt.min_exp) - fmt.man_bits
+        step = np.ldexp(1.0, step_exp.astype(np.int64))
+        # np.round is round-half-even
+        q = np.round(x / np.where(step == 0, 1.0, step)) * step
+        if fmt.inf_behavior == "ieee":
+            over = np.where(np.isinf(x), x, np.sign(x) * np.inf)
+        else:
+            over = np.where(np.isinf(x), x, np.sign(x) * fmt.max_normal)
+        q = np.where(np.abs(q) > fmt.max_normal, over, q)
+        q = np.where(np.isnan(x), np.nan, q)
+    return q
+
+
+# ---------------------------------------------------------------------------
+# Bit-pattern encode/decode (numpy; exact). Used by the ExSdotp oracle and
+# storage round-trip tests for formats without a native dtype.
+# ---------------------------------------------------------------------------
+
+def encode_np(x: np.ndarray, fmt) -> np.ndarray:
+    """Encode (already representable or arbitrary) values to fmt bit patterns."""
+    fmt = get_format(fmt)
+    q = quantize_np(np.asarray(x, np.float64), fmt)
+    sign = (np.signbit(q)).astype(np.uint64)
+    out = np.zeros(q.shape, np.uint64)
+    aq = np.abs(q)
+    nan = np.isnan(q)
+    inf = np.isinf(q)
+    sub = (aq < fmt.min_normal) & ~nan  # includes zero
+    with np.errstate(all="ignore"):
+        m, e = np.frexp(aq)
+        e = e - 1
+        # normals
+        man_norm = np.rint((m * 2.0 - 1.0) * (1 << fmt.man_bits)).astype(np.uint64)
+        exp_norm = (e + fmt.bias).astype(np.int64)
+        # subnormals (and zero): value = man * 2^(min_exp - man_bits)
+        man_sub = np.rint(aq / fmt.min_subnormal).astype(np.uint64)
+    exp_field = np.where(sub, 0, np.clip(exp_norm, 0, (1 << fmt.exp_bits) - 1)).astype(np.uint64)
+    man_field = np.where(sub, man_sub, man_norm).astype(np.uint64)
+    exp_field = np.where(inf | nan, (1 << fmt.exp_bits) - 1, exp_field)
+    man_field = np.where(inf, 0, man_field)
+    man_field = np.where(nan, 1 << (fmt.man_bits - 1), man_field)  # quiet NaN
+    out = (sign << (fmt.exp_bits + fmt.man_bits)) | (exp_field << fmt.man_bits) | man_field
+    nbytes = max(8, 1 << (fmt.width - 1).bit_length())
+    return out.astype(np.dtype(f"uint{nbytes}"))
+
+
+def decode_np(bits: np.ndarray, fmt) -> np.ndarray:
+    fmt = get_format(fmt)
+    bits = np.asarray(bits).astype(np.uint64)
+    sign = ((bits >> (fmt.exp_bits + fmt.man_bits)) & 1).astype(np.int64)
+    exp_f = ((bits >> fmt.man_bits) & ((1 << fmt.exp_bits) - 1)).astype(np.int64)
+    man_f = (bits & ((1 << fmt.man_bits) - 1)).astype(np.int64)
+    is_sub = exp_f == 0
+    is_special = exp_f == (1 << fmt.exp_bits) - 1
+    with np.errstate(all="ignore"):
+        val_norm = np.ldexp(1.0 + man_f / (1 << fmt.man_bits), exp_f - fmt.bias)
+        val_sub = man_f * fmt.min_subnormal
+    val = np.where(is_sub, val_sub, val_norm)
+    val = np.where(is_special & (man_f == 0), np.inf, val)
+    val = np.where(is_special & (man_f != 0), np.nan, val)
+    return np.where(sign == 1, -val, val)

@@ -1,0 +1,106 @@
+"""QLinear — every GEMM in the framework routes through the paper's
+expanding-dot-product primitive.
+
+Forward (HFP8): x, W are quantized per-tensor (or per-block) into FP8alt
+(E4M3), multiplied narrow, accumulated fp32, rounded once into the carrier
+dtype — a GEMM-sized ExSdotp chain.  Backward: gradients are quantized into
+FP8 (E5M2, wider range) for both dgrad and wgrad GEMMs, again with fp32
+accumulation.  This is Sun et al.'s HFP8 recipe, the workload the
+MiniFloat-NN ISA was designed for, expressed as a ``jax.custom_vjp``.
+
+First/last layers (embedding, logits) conventionally stay un-quantized;
+models decide via config flags.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops
+from ..kernels.ops import resolve_impl
+from .policy import Policy, get_policy
+
+__all__ = ["qlinear", "linear"]
+
+
+def _gemm(a, b, scale, out_dtype, impl):
+    return ops.exsdotp_gemm(a, b, scale, out_dtype=out_dtype, impl=impl)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _qlinear_nd(x, w, policy: Policy, impl: str):
+    y, _ = _qlinear_nd_fwd(x, w, policy, impl)
+    return y
+
+
+def _qlinear_nd_fwd(x, w, policy: Policy, impl: str):
+    """x [..., K] @ w [K, N] — native rank: no reshape, so sharded leading
+    dims (batch/sequence-parallel) survive into the GEMM instead of being
+    all-gathered by a flatten (§Perf iteration D1)."""
+    xq, sx = ops.quantize_tensor(x, policy.fwd_dtype)
+    wq, sw = ops.quantize_tensor(w, policy.fwd_dtype)
+    if resolve_impl(impl) == "xla":
+        acc = jnp.dot(xq.astype(jnp.float32), wq.astype(jnp.float32),
+                      preferred_element_type=jnp.float32)
+        y = (acc * (sx * sw)).astype(policy.compute_dtype)
+    else:
+        lead = x.shape[:-1]
+        y = _gemm(xq.reshape(-1, x.shape[-1]), wq, sx * sw,
+                  policy.compute_dtype, impl).reshape(*lead, w.shape[-1])
+    return y, (xq, sx, wq, sw)
+
+
+def _qlinear_nd_bwd(policy: Policy, impl: str, res, g):
+    xq, sx, wq, sw = res
+    cd = policy.compute_dtype  # x and w were cast to this before the vjp
+    gq, sg = ops.quantize_tensor(g, policy.bwd_dtype)
+    nbatch = xq.ndim - 1
+    if resolve_impl(impl) == "xla":
+        # dgrad: dx[..., K] = g[..., N] @ W^T
+        dx = (jnp.dot(gq.astype(jnp.float32), wq.astype(jnp.float32).T,
+                      preferred_element_type=jnp.float32)
+              * (sg * sw)).astype(cd)
+        # wgrad: dW[K, N] = sum_... x[..., K] g[..., N]
+        dw = (jnp.tensordot(xq.astype(jnp.float32), gq.astype(jnp.float32),
+                            axes=(list(range(nbatch)), list(range(nbatch))))
+              * (sx * sg)).astype(cd)
+        return dx, dw
+    k = xq.shape[-1]
+    n = gq.shape[-1]
+    g2 = gq.reshape(-1, n)
+    x2 = xq.reshape(-1, k)
+    dx = _gemm(g2, wq.T, sg * sw, cd, impl).reshape(xq.shape)
+    dw = _gemm(x2.T, g2, sx * sg, cd, impl)
+    return dx, dw
+
+
+_qlinear_nd.defvjp(_qlinear_nd_fwd, _qlinear_nd_bwd)
+
+
+def qlinear(x: jax.Array, w: jax.Array, policy, *, impl: str = "auto") -> jax.Array:
+    """y[..., N] = x[..., K] @ w[K, N] under the mixed-precision policy."""
+    policy = get_policy(policy)
+    if not policy.quantized:
+        cd = policy.compute_dtype
+        return jnp.dot(x.astype(cd), w.astype(cd),
+                       preferred_element_type=jnp.float32).astype(cd)
+    return _qlinear_nd(x.astype(policy.compute_dtype),
+                       w.astype(policy.compute_dtype), policy, impl)
+
+
+def linear(x: jax.Array, w: jax.Array, b=None, *, policy, impl: str = "auto",
+           quantized: bool = True) -> jax.Array:
+    """Linear layer with optional bias; ``quantized=False`` opts a layer out
+    (embedding/logits heads, norms' affine params, routers)."""
+    policy = get_policy(policy)
+    if quantized and policy.quantized:
+        y = qlinear(x, w, policy, impl=impl)
+    else:
+        cd = policy.compute_dtype
+        y = jnp.dot(x.astype(cd), w.astype(cd),
+                    preferred_element_type=jnp.float32).astype(cd)
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y

@@ -1,0 +1,65 @@
+"""Mixed-precision policies — the CSR ``src_is_alt``/``dst_is_alt`` bits,
+framework-scale.
+
+The paper controls which minifloat format each kernel uses through two CSR
+bits; here a ``Policy`` object threads the same decision through every
+layer. The flagship policy is the paper's target workload, HFP8
+(Sun et al. [7], cited in §I/§II-A): FP8alt (E4M3) forward, FP8 (E5M2)
+backward, wide accumulation — exactly the format pairing the ExSdotp unit
+exists to serve.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+__all__ = ["Policy", "HFP8", "FP8E4", "BF16", "FP16", "FP32", "POLICIES",
+           "get_policy"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    name: str
+    #: GEMM operand format on the forward pass (None = no quantization)
+    fwd_dtype: Optional[jnp.dtype]
+    #: GEMM operand format for gradients on the backward pass
+    bwd_dtype: Optional[jnp.dtype]
+    #: dtype activations/params are carried in between GEMMs
+    compute_dtype: jnp.dtype
+    #: master weights / optimizer accumulation dtype
+    param_dtype: jnp.dtype
+    #: block size for blockwise scaling; 0 = per-tensor scaling
+    block_scale: int = 0
+    #: loss-scaling needed? (fp16/fp8-e5m2 gradients have narrow range)
+    loss_scaling: bool = False
+
+    @property
+    def quantized(self) -> bool:
+        return self.fwd_dtype is not None
+
+
+# The paper's training recipe: E4M3 forward (more precision), E5M2 backward
+# (more range — gradients are long-tailed), fp32 accumulate, bf16 carrier.
+HFP8 = Policy("hfp8", jnp.float8_e4m3, jnp.float8_e5m2,
+              jnp.bfloat16, jnp.float32, loss_scaling=True)
+#: E4M3 both directions (inference-style / forward-dominant)
+FP8E4 = Policy("fp8e4", jnp.float8_e4m3, jnp.float8_e4m3,
+               jnp.bfloat16, jnp.float32)
+#: HFP8 with 128x128 block scaling (beyond-paper; DeepSeek-V3-style)
+HFP8_BLOCK = Policy("hfp8_block", jnp.float8_e4m3, jnp.float8_e5m2,
+                    jnp.bfloat16, jnp.float32, block_scale=128,
+                    loss_scaling=True)
+BF16 = Policy("bf16", None, None, jnp.bfloat16, jnp.float32)
+FP16 = Policy("fp16", None, None, jnp.float16, jnp.float32,
+              loss_scaling=True)
+FP32 = Policy("fp32", None, None, jnp.float32, jnp.float32)
+
+POLICIES = {p.name: p for p in (HFP8, FP8E4, HFP8_BLOCK, BF16, FP16, FP32)}
+
+
+def get_policy(name) -> Policy:
+    if isinstance(name, Policy):
+        return name
+    return POLICIES[str(name).lower()]

@@ -1,0 +1,37 @@
+"""Dynamic loss scaling — required hygiene for narrow-range gradient
+formats (fp16 / FP8-E5M2 per-tensor-scaled).
+
+Classic scheme: multiply the loss by ``scale``; unscale gradients; if any
+gradient is non-finite, skip the update and halve the scale; after
+``growth_interval`` clean steps, double it (capped).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["loss_scale_init", "check_and_update_scale"]
+
+
+def loss_scale_init(initial: float = 2.0 ** 15):
+    return {"scale": jnp.float32(initial),
+            "good_steps": jnp.zeros((), jnp.int32)}
+
+
+def check_and_update_scale(state, grads, *, growth_interval: int = 2000,
+                           factor: float = 2.0, max_scale: float = 2.0 ** 24):
+    """Returns (unscaled_grads, new_state, skip_update)."""
+    finite = jnp.array(True)
+    for g in jax.tree.leaves(grads):
+        finite &= jnp.all(jnp.isfinite(g.astype(jnp.float32)))
+    scale = state["scale"]
+    unscaled = jax.tree.map(
+        lambda g: (g.astype(jnp.float32) / scale).astype(g.dtype), grads)
+    good = jnp.where(finite, state["good_steps"] + 1, 0)
+    grow = good >= growth_interval
+    new_scale = jnp.where(
+        ~finite, jnp.maximum(scale / factor, 1.0),
+        jnp.where(grow, jnp.minimum(scale * factor, max_scale), scale))
+    new_state = {"scale": new_scale,
+                 "good_steps": jnp.where(grow, 0, good)}
+    return unscaled, new_state, ~finite

@@ -1,0 +1,101 @@
+"""Flash attention — Pallas TPU kernel (online-softmax, O(S) memory).
+
+The attention analogue of the ExSdotp rule: logits and the softmax
+accumulator live in f32 VMEM scratch at full precision for the whole KV
+sweep (never materialized to HBM), with a single rounding to the carrier
+dtype when the output block retires. This removes the O(S^2) score
+materialization that dominates the prefill_32k memory roofline term
+(EXPERIMENTS.md §Roofline).
+
+Layout: q/k/v [BH, S, hd]; grid (BH, S/bq, T/bk), KV innermost
+('arbitrary'); running (m, l, acc) in VMEM scratch. Causal masking by
+absolute position; fully-masked future blocks still execute (structural
+zero — acceptable at dry-run level; a carry-skip via
+pltpu.CompilerParams is the known next step).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_pallas"]
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            causal: bool, scale: float, block_q: int, block_k: int):
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                    # [bq, hd]
+    k = k_ref[0].astype(jnp.float32)                    # [bk, hd]
+    v = v_ref[0].astype(jnp.float32)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+    if causal:
+        iq = pl.program_id(1)
+        rows = iq * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 0)
+        cols = kk * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        s = jnp.where(cols <= rows, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(kk == pl.num_programs(2) - 1)
+    def _write():
+        # single rounding into the carrier dtype (the ExSdotp rule)
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "block_q", "block_k", "interpret"))
+def flash_attention_pallas(q, k, v, *, causal: bool = True,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = False):
+    """q [BH, S, hd], k/v [BH, T, hd] -> [BH, S, hd] (same dtype as q)."""
+    bh, s, hd = q.shape
+    t = k.shape[1]
+    assert s % block_q == 0 and t % block_k == 0, ((s, t),
+                                                   (block_q, block_k))
+    scale = hd ** -0.5
+    kern = functools.partial(_kernel, causal=causal, scale=scale,
+                             block_q=block_q, block_k=block_k)
+    return pl.pallas_call(
+        kern,
+        grid=(bh, s // block_q, t // block_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, i, kk: (b, i, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, kk: (b, kk, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, kk: (b, kk, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda b, i, kk: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),      # running max
+            pltpu.VMEM((block_q, 1), jnp.float32),      # running sum
+            pltpu.VMEM((block_q, hd), jnp.float32),     # output accumulator
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)

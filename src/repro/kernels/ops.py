@@ -1,0 +1,97 @@
+"""Public jit'd wrappers for the kernel layer: dispatch + padding + autotune.
+
+``impl`` resolution:
+  * 'auto'              -> compiled Pallas on TPU, XLA fallback elsewhere
+  * 'pallas'            -> compiled Pallas (TPU)
+  * 'pallas_interpret'  -> Pallas interpret mode (CPU correctness runs/tests)
+  * 'xla'               -> pure-jnp reference semantics (exact same math)
+
+All entry points accept arbitrary (M, K, N); non-aligned shapes are padded
+up to block multiples (zero padding is exact for GEMM and for amax).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .exsdotp_gemm import exsdotp_gemm_pallas, default_blocks
+from .quant import quant_blockwise_pallas
+
+__all__ = ["exsdotp_gemm", "quantize_tensor", "quantize_blockwise",
+           "dequantize_blockwise", "resolve_impl"]
+
+
+def resolve_impl(impl: str) -> str:
+    if impl == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    return impl
+
+
+def _pad2(x, bm, bn):
+    m, n = x.shape
+    pm, pn = (-m) % bm, (-n) % bn
+    if pm or pn:
+        x = jnp.pad(x, ((0, pm), (0, pn)))
+    return x
+
+
+def exsdotp_gemm(a: jax.Array, b: jax.Array, scale=1.0, *,
+                 out_dtype=jnp.float32, impl: str = "auto",
+                 blocks=None) -> jax.Array:
+    """Expanding GEMM: downcast(scale * A @ B) with fp32 accumulation."""
+    impl = resolve_impl(impl)
+    if impl == "xla":
+        return ref.exsdotp_gemm_ref(a, b, scale, out_dtype=out_dtype)
+    m, k = a.shape
+    _, n = b.shape
+    bm, bn, bk = blocks or default_blocks(m, n, k, a.dtype.itemsize)
+    a = _pad2(a, bm, bk)
+    b = _pad2(b, bk, bn)
+    out = exsdotp_gemm_pallas(
+        a, b, jnp.asarray(scale, jnp.float32).reshape(1, 1),
+        out_dtype=out_dtype, block_m=bm, block_n=bn, block_k=bk,
+        interpret=(impl == "pallas_interpret"))
+    return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("q_dtype", "margin"))
+def quantize_tensor(x: jax.Array, q_dtype, margin: float = 1.0):
+    """Per-tensor scaled quantization (classic FP8 recipe, XLA-fused).
+
+    Returns (q, scale) with x ~= q.astype(f32) * scale.
+    """
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf))
+    max_normal = jnp.float32(jnp.finfo(q_dtype).max)
+    s = jnp.where(amax > 0, amax / (max_normal * margin), 1.0)
+    return (xf / s).astype(q_dtype), s
+
+
+def quantize_blockwise(x: jax.Array, q_dtype, *, block_m=128, block_n=128,
+                       margin: float = 1.0, impl: str = "auto"):
+    """Per-block scaled quantization. Returns (q[M,N], scales[gm,gn])."""
+    impl = resolve_impl(impl)
+    m, n = x.shape
+    if impl == "xla":
+        x = _pad2(x, block_m, block_n)
+        q, s = ref.quant_blockwise_ref(x, q_dtype=q_dtype, block_m=block_m,
+                                       block_n=block_n, margin=margin)
+        return q[:m, :n], s
+    x = _pad2(x, block_m, block_n)
+    q, s = quant_blockwise_pallas(x, q_dtype=q_dtype, block_m=block_m,
+                                  block_n=block_n, margin=margin,
+                                  interpret=(impl == "pallas_interpret"))
+    return q[:m, :n], s
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n"))
+def dequantize_blockwise(q: jax.Array, s: jax.Array, *, block_m=128,
+                         block_n=128) -> jax.Array:
+    m, n = q.shape
+    qp = _pad2(q.astype(jnp.float32), block_m, block_n)
+    gm, gn = qp.shape[0] // block_m, qp.shape[1] // block_n
+    xb = qp.reshape(gm, block_m, gn, block_n) * s[:, None, :, None]
+    return xb.reshape(qp.shape)[:m, :n]

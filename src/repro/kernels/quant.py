@@ -1,0 +1,68 @@
+"""Minifloat quantization kernels — the CAST unit of the extended FPU.
+
+Two granularities:
+
+* per-tensor: one scale for the whole tensor (classic FP8 recipes; the
+  amax reduce runs in XLA, the cast is trivially fused by XLA too);
+* per-block (Pallas): each (bm, bn) tile computes its own amax, scale and
+  cast in one VMEM pass — a beyond-paper optimization matching how modern
+  FP8 training (e.g. 128x128 block scaling) bounds quantization error, and
+  the natural granularity for the ExSdotp GEMM's tiles.
+
+The kernel fuses amax + scale + cast so the tensor is read once from HBM
+and written once at 1/4-1/2 the bytes: a pure memory-roofline win.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["quant_blockwise_pallas"]
+
+
+def _kernel(x_ref, q_ref, s_ref, *, max_normal: float, margin: float):
+    x = x_ref[...].astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x))
+    # dequant scale s: quantized = x / s fills the format's range.
+    s = jnp.where(amax > 0, amax / (max_normal * margin), 1.0)
+    q_ref[...] = (x / s).astype(q_ref.dtype)
+    s_ref[0, 0] = s
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("q_dtype", "block_m", "block_n", "margin", "interpret"))
+def quant_blockwise_pallas(x: jax.Array, *, q_dtype,
+                           block_m: int = 128, block_n: int = 128,
+                           margin: float = 1.0,
+                           interpret: bool = False):
+    """Quantize x[M,N] into ``q_dtype`` with one scale per (bm, bn) block.
+
+    Returns (q[M,N], scales[M/bm, N/bn]) with x ~= q.astype(f32) * scale
+    broadcast per block. ``margin`` < 1 reserves headroom below max_normal.
+    """
+    m, n = x.shape
+    assert m % block_m == 0 and n % block_n == 0, ((m, n), (block_m, block_n))
+    grid = (m // block_m, n // block_n)
+    max_normal = float(jnp.finfo(q_dtype).max)
+    kern = functools.partial(_kernel, max_normal=max_normal, margin=margin)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_m, block_n), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j), memory_space=pltpu.SMEM),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), q_dtype),
+            jax.ShapeDtypeStruct((m // block_m, n // block_n), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(x)

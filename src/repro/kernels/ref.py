@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for every Pallas kernel (bit-faithful semantics)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["exsdotp_gemm_ref", "quant_blockwise_ref"]
+
+
+def exsdotp_gemm_ref(a: jax.Array, b: jax.Array, scale=1.0,
+                     *, out_dtype=jnp.float32) -> jax.Array:
+    """Expanding GEMM oracle: upcast, fp32 accumulate, scale, single downcast.
+
+    Matches the kernel exactly when the fp32 accumulation itself is exact
+    (e.g. integer-valued inputs); otherwise to within fp32 summation-order
+    rounding (tested with tight tolerances).
+    """
+    acc = jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    return (acc * jnp.float32(scale)).astype(out_dtype)
+
+
+def quant_blockwise_ref(x: jax.Array, *, q_dtype, block_m=128, block_n=128,
+                        margin=1.0):
+    m, n = x.shape
+    gm, gn = m // block_m, n // block_n
+    xb = x.astype(jnp.float32).reshape(gm, block_m, gn, block_n)
+    amax = jnp.max(jnp.abs(xb), axis=(1, 3))
+    max_normal = float(jnp.finfo(q_dtype).max)
+    s = jnp.where(amax > 0, amax / (max_normal * margin), 1.0)
+    q = (xb / s[:, None, :, None]).astype(q_dtype)
+    return q.reshape(m, n), s
+
+
+def flash_attention_ref(q, k, v, *, causal=True):
+    """q [BH,S,hd], k/v [BH,T,hd] — exact softmax attention oracle."""
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        sq, tk = s.shape[-2:]
+        mask = jnp.arange(tk)[None, :] <= jnp.arange(sq)[:, None]
+        s = jnp.where(mask[None], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", w,
+                      v.astype(jnp.float32)).astype(q.dtype)

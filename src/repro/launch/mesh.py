@@ -1,0 +1,32 @@
+"""Production mesh builders.
+
+Defined as FUNCTIONS (never module-level constants) so importing this
+module touches no jax device state — required because the dry-run pins
+``xla_force_host_platform_device_count`` before first jax init.
+
+Topology: a TPU v5e pod is a 16x16 chip grid; ``data`` carries DP+ZeRO,
+``model`` carries TP/EP/SP. The multi-pod mesh adds an outer ``pod`` axis
+(DCN/ICI-slow hop) used for hierarchical data parallelism: ZeRO shards
+stay *within* a pod, gradients cross pods once per step (optionally
+FP8-compressed, optim/grad_compress.py).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_test_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for CPU tests (requires enough local devices)."""
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))

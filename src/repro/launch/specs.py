@@ -1,0 +1,216 @@
+"""input_specs / state specs / sharding trees for the dry-run.
+
+Everything is ShapeDtypeStruct — weak-type-correct, shardable, zero
+allocation. The full-size configs are only ever *lowered*, never run.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeCfg, SHAPES
+from ..core.policy import get_policy
+from ..models import build_model
+from ..parallel.sharding import param_pspecs, make_rules
+from ..optim.adamw import AdamWConfig, adamw_init
+
+__all__ = ["input_specs", "cell_is_applicable", "build_cell", "shardings_for"]
+
+
+def cell_is_applicable(cfg: ModelConfig, shape: ShapeCfg) -> tuple[bool, str]:
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("full-attention arch: O(L^2) at 512k infeasible; "
+                       "run for SSM/hybrid only (DESIGN.md §5)")
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeCfg) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    policy = get_policy(cfg.policy_name)
+    cd = policy.compute_dtype
+    b, s = shape.global_batch, shape.seq_len
+    specs = {}
+    if shape.kind in ("train", "prefill"):
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        if cfg.family == "encdec":
+            specs["aux"] = {"frames": jax.ShapeDtypeStruct(
+                (b, cfg.enc_seq, cfg.d_model), cd)}
+        elif cfg.family == "vlm":
+            specs["aux"] = {"patches": jax.ShapeDtypeStruct(
+                (b, cfg.n_patches, cfg.frontend_dim), cd)}
+    else:  # decode: one new token against a seq_len cache
+        specs["tok"] = jax.ShapeDtypeStruct((b,), jnp.int32)
+        model = build_model(cfg)
+        specs["cache"] = jax.eval_shape(
+            lambda: model.init_cache(b, s))
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# sharding trees
+# ---------------------------------------------------------------------------
+
+def _batch_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _div(n: int, mesh: Mesh, axes) -> bool:
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return n % size == 0 and n >= size
+
+
+def cache_pspecs(cache_shapes, mesh: Mesh):
+    """Name-rule sharding for decode caches (kv, ssm state, conv, slstm)."""
+    ba = _batch_axes(mesh)
+
+    def spec(path, leaf):
+        name = str(getattr(path[-1], "key", getattr(path[-1], "idx", "")))
+        nd = len(leaf.shape)
+        sh = leaf.shape
+        axes = [None] * nd
+        if name in ("k", "v") and nd >= 4:
+            # [..., B, T, KV, hd]
+            if _div(sh[nd - 4], mesh, ba):
+                axes[nd - 4] = ba
+            if _div(sh[nd - 2], mesh, "model"):
+                axes[nd - 2] = "model"
+        elif name == "h" and nd >= 4:
+            # [..., B, H, dk, dv]
+            if _div(sh[nd - 4], mesh, ba):
+                axes[nd - 4] = ba
+            if _div(sh[nd - 3], mesh, "model"):
+                axes[nd - 3] = "model"
+        elif name == "conv" and nd >= 3:
+            # [..., B, K, C]
+            if _div(sh[nd - 3], mesh, ba):
+                axes[nd - 3] = ba
+            if _div(sh[nd - 1], mesh, "model"):
+                axes[nd - 1] = "model"
+        elif name in ("hid", "c", "n", "m") and nd >= 2:
+            # [..., B, D]
+            if _div(sh[nd - 2], mesh, ba):
+                axes[nd - 2] = ba
+            if _div(sh[nd - 1], mesh, "model"):
+                axes[nd - 1] = "model"
+        return P(*axes)
+
+    return jax.tree_util.tree_map_with_path(spec, cache_shapes)
+
+
+def shardings_for(tree_specs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _retag_batch(pspec_tree, mesh):
+    """Replace 'data' batch tags with the mesh's (pod,data) tuple where
+    appropriate — param FSDP stays within-pod by design (hierarchical
+    ZeRO), so params keep plain 'data'."""
+    return pspec_tree
+
+
+# ---------------------------------------------------------------------------
+# build one dry-run cell: returns (fn, example_args, in_shardings, donate)
+# ---------------------------------------------------------------------------
+
+def build_cell(cfg: ModelConfig, shape: ShapeCfg, mesh: Mesh, *,
+               opt_cfg: AdamWConfig | None = None, seq_shard: bool | None = None,
+               impl: str = "xla", microbatches: int = 1):
+    """Assemble the jittable step + arg specs + shardings for a cell."""
+    from ..train.train_step import make_train_step
+    model = build_model(cfg)
+    policy = get_policy(cfg.policy_name)
+    if seq_shard is None:
+        # sequence parallelism (and with it the narrow-wire TP-GEMM path)
+        # applies wherever full sequences flow: training and prefill.
+        # Recurrent families (xlstm/hybrid) scan over time — sharding the
+        # time dim forces per-chunk resharding inside the scan (measured
+        # 10x bytes regression), so they stay batch-sharded.
+        seq_shard = (shape.kind in ("train", "prefill")
+                     and cfg.family not in ("xlstm", "hybrid"))
+    rules = make_rules(mesh, seq_shard=seq_shard)
+    ba = _batch_axes(mesh)
+
+    params_shapes = jax.eval_shape(model.init, jax.random.key(0))
+    p_pspecs = param_pspecs(params_shapes, mesh)
+    specs = input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        opt_cfg = opt_cfg or AdamWConfig()
+        state_shapes = {
+            "params": params_shapes,
+            "opt": jax.eval_shape(lambda p: adamw_init(p, opt_cfg),
+                                  params_shapes),
+            "rng": jax.ShapeDtypeStruct((2,), jnp.uint32),
+        }
+        def pod_zero(spec_tree):
+            """Optimizer-state sharding additionally splits the FSDP dim
+            across pods (hierarchical ZeRO-1: params replicate per pod,
+            optimizer state does not — §Perf A1)."""
+            if "pod" not in mesh.axis_names:
+                return spec_tree
+
+            def retag(s):
+                return P(*[("data", "pod") if a == "data" else a
+                           for a in s])
+
+            return jax.tree.map(retag, spec_tree,
+                                is_leaf=lambda x: isinstance(x, P))
+
+        state_pspecs = {
+            "params": p_pspecs,
+            "opt": {"step": P(), "master": pod_zero(p_pspecs),
+                    "m": pod_zero(p_pspecs), "v": pod_zero(p_pspecs)},
+            "rng": P(),
+        }
+        if policy.loss_scaling:
+            state_shapes["lscale"] = {
+                "scale": jax.ShapeDtypeStruct((), jnp.float32),
+                "good_steps": jax.ShapeDtypeStruct((), jnp.int32)}
+            state_pspecs["lscale"] = {"scale": P(), "good_steps": P()}
+
+        step = make_train_step(model, opt_cfg, rules=rules, impl=impl,
+                               microbatches=microbatches)
+        tok_spec = P(ba, None)
+        args = (state_shapes, specs["tokens"])
+        in_specs = (state_pspecs, tok_spec)
+        if "aux" in specs:
+            args = args + (specs["aux"],)
+            in_specs = in_specs + (jax.tree.map(
+                lambda _: P(ba, None, None), specs["aux"]),)
+            fn = lambda st, t, a: step(st, t, aux=a)
+        else:
+            fn = step
+        donate = (0,)
+        return fn, args, in_specs, donate, model, rules
+
+    if shape.kind == "prefill":
+        def fn(params, tokens, aux=None):
+            logits, _ = model.apply(params, tokens, aux=aux, rules=rules,
+                                    impl=impl)
+            return logits
+        args = (params_shapes, specs["tokens"])
+        in_specs = (p_pspecs, P(ba, None))
+        if "aux" in specs:
+            args = args + (specs["aux"],)
+            in_specs = in_specs + (jax.tree.map(
+                lambda _: P(ba, None, None), specs["aux"]),)
+        return fn, args, in_specs, (), model, rules
+
+    # decode
+    cache_shapes = specs["cache"]
+    c_pspecs = cache_pspecs(cache_shapes, mesh)
+
+    def fn(params, tok, cache):
+        return model.decode_step(params, tok, cache, rules=rules, impl=impl)
+
+    tok_b = specs["tok"].shape[0]
+    tok_spec = P(ba) if _div(tok_b, mesh, ba) else P()
+    args = (params_shapes, specs["tok"], cache_shapes)
+    in_specs = (p_pspecs, tok_spec, c_pspecs)
+    return fn, args, in_specs, (2,), model, rules

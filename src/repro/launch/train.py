@@ -1,0 +1,95 @@
+"""Production training launcher.
+
+On a real multi-host TPU fleet this binary runs once per host
+(jax.distributed.initialize is called when JAX_COORDINATOR is set); on
+this container it runs the same code path on whatever devices exist.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-3b \
+        --reduced --steps 20 --batch 8 --seq 64 --ckpt /tmp/ck
+
+Flags mirror the dry-run cells: the same (arch x shape) configs that
+compile at 512 chips run here at reduced scale; the mesh adapts to the
+device count (elastic).
+"""
+import argparse
+import os
+
+import jax
+import numpy as np
+
+from ..configs import get_arch
+from ..data.pipeline import DataConfig, SyntheticTokens
+from ..models import build_model
+from ..optim.adamw import AdamWConfig
+from ..parallel.sharding import make_rules, param_pspecs
+from ..train.train_step import make_train_state, make_train_step
+from ..train.trainer import Trainer
+
+
+def auto_mesh():
+    """Build the largest (data, model) mesh the devices support."""
+    n = len(jax.devices())
+    if n == 1:
+        return None
+    model = 1
+    for m in (16, 8, 4, 2):
+        if n % m == 0:
+            model = m
+            break
+    return jax.make_mesh(
+        (n // model, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU-sized variant of the arch")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt", default="/tmp/repro_launch_train")
+    ap.add_argument("--save-every", type=int, default=10)
+    ap.add_argument("--policy", default=None)
+    args = ap.parse_args()
+
+    if os.environ.get("JAX_COORDINATOR"):
+        jax.distributed.initialize()  # multi-host fleet entry
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    if args.policy:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, policy_name=args.policy)
+    model = build_model(cfg)
+    mesh = auto_mesh()
+    rules = make_rules(mesh) if mesh else None
+
+    opt = AdamWConfig(total_steps=max(args.steps, 100))
+    state = make_train_state(model, jax.random.key(0), opt)
+    if mesh is not None:
+        from jax.sharding import NamedSharding
+        pspecs = param_pspecs(jax.eval_shape(lambda: state["params"]), mesh)
+        shard = jax.tree.map(
+            lambda s: NamedSharding(mesh, s), pspecs,
+            is_leaf=lambda x: hasattr(x, "_normalized_spec") or
+            type(x).__name__ == "PartitionSpec")
+        state["params"] = jax.tree.map(jax.device_put, state["params"], shard)
+    step = make_train_step(model, opt, rules=rules,
+                           microbatches=args.microbatches, impl="auto")
+    data = SyntheticTokens(DataConfig(cfg.vocab_size, args.seq, args.batch))
+    trainer = Trainer(model, step, state, data, ckpt_dir=args.ckpt,
+                      save_every=args.save_every)
+    if trainer.start_step:
+        print(f"[launch.train] resumed at step {trainer.start_step}")
+    log = trainer.run(args.steps)
+    print(f"[launch.train] {cfg.name}: "
+          f"loss {log[0]['loss']:.4f} -> {log[-1]['loss']:.4f}, "
+          f"{len(log)} steps, stragglers={trainer.straggler_count}")
+
+
+if __name__ == "__main__":
+    main()

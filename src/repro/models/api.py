@@ -1,0 +1,19 @@
+"""build_model — family dispatch."""
+from __future__ import annotations
+
+from ..configs.base import ModelConfig
+from . import transformer as T
+
+__all__ = ["build_model"]
+
+
+def build_model(cfg: ModelConfig) -> T.ModelApi:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return T.build_dense(cfg)
+    if cfg.family == "encdec":
+        return T.build_encdec(cfg)
+    if cfg.family == "xlstm":
+        return T.build_xlstm(cfg)
+    if cfg.family == "hybrid":
+        return T.build_hybrid(cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")

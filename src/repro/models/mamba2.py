@@ -1,0 +1,128 @@
+"""Mamba2 (SSD) block — used standalone and inside the zamba2 hybrid.
+
+Structure per block: in_proj -> (z, x, B, C, dt); short causal depthwise
+conv over (x, B, C); selective state-space recurrence via the shared
+chunked-GLA engine; gated RMSNorm; out_proj. Projections are quantized
+(expanding GEMM); the recurrent state accumulates in f32 — the paper's
+"accumulate wide" rule applied to the SSM state (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.linear import linear
+from .layers import rms_norm
+from .ssm import chunked_gla, gla_step
+
+__all__ = ["init_mamba2", "mamba2_block", "init_mamba2_cache"]
+
+
+def _conv_channels(cfg):
+    return cfg.ssm_inner + 2 * cfg.ssm_state
+
+
+def init_mamba2(key, cfg, dtype):
+    d, di, n, h = cfg.d_model, cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(key, 4)
+    s = d ** -0.5
+    return {
+        # order: z | x | B | C | dt
+        "in_proj": jax.random.normal(
+            ks[0], (d, 2 * di + 2 * n + h), dtype) * s,
+        "conv_w": jax.random.normal(
+            ks[1], (cfg.ssm_conv, _conv_channels(cfg)), dtype) * 0.2,
+        "conv_b": jnp.zeros((_conv_channels(cfg),), dtype),
+        "a_log": jnp.zeros((h,), jnp.float32),           # A = -exp(a_log)
+        "dt_bias": jnp.full((h,), -2.0, jnp.float32),    # softplus ~ 0.12
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm_scale": jnp.ones((di,), dtype),
+        "out_proj": jax.random.normal(ks[2], (di, d), dtype) * (di ** -0.5),
+    }
+
+
+def _causal_depthwise_conv(u, w, b):
+    """u [B,S,C]; w [K,C] depthwise causal conv (K small, unrolled taps)."""
+    k = w.shape[0]
+    uf = u.astype(jnp.float32)
+    s = uf.shape[1]
+    out = sum(
+        jnp.pad(uf, ((0, 0), (k - 1 - i, 0), (0, 0)))[:, :s, :]
+        * w[i].astype(jnp.float32)
+        for i in range(k))
+    return jax.nn.silu(out + b.astype(jnp.float32)).astype(u.dtype)
+
+
+def _split_proj(proj, cfg):
+    di, n, h = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :di]
+    xbc = proj[..., di:di + di + 2 * n]
+    dt = proj[..., di + di + 2 * n:]
+    return z, xbc, dt
+
+
+def mamba2_block(x, p, cfg, policy, *, cache=None, rules=None, impl="auto"):
+    """x [B,S,D] -> ([B,S,D], new_cache). cache = {'h', 'conv'} for decode."""
+    b, s, d = x.shape
+    di, n, h = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads
+    pdim = cfg.ssm_headdim
+
+    proj = linear(x, p["in_proj"], policy=policy, impl=impl)
+    z, xbc, dt_raw = _split_proj(proj, cfg)
+
+    new_cache = None
+    if cache is None:
+        raw_tail = xbc.astype(jnp.float32)[:, -(p["conv_w"].shape[0] - 1):, :]
+        new_conv = jnp.pad(
+            raw_tail,
+            ((0, 0), (max(0, p["conv_w"].shape[0] - 1 - s), 0), (0, 0)))
+        xbc = _causal_depthwise_conv(xbc, p["conv_w"], p["conv_b"])
+    else:
+        # decode: roll the conv window state [B, K-1, C]
+        window = jnp.concatenate([cache["conv"], xbc.astype(jnp.float32)], 1)
+        k = p["conv_w"].shape[0]
+        out = jnp.einsum("bkc,kc->bc", window[:, -k:, :],
+                         p["conv_w"].astype(jnp.float32))
+        xbc = jax.nn.silu(out + p["conv_b"].astype(jnp.float32))[:, None, :]
+        xbc = xbc.astype(x.dtype)
+        new_conv = window[:, -(k - 1):, :]
+
+    xin = xbc[..., :di].reshape(b, s, h, pdim)
+    bmat = xbc[..., di:di + n]
+    cmat = xbc[..., di + n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"])                      # [B,S,H]
+    a = -jnp.exp(p["a_log"])                                  # [H] < 0
+    log_decay = dt * a                                        # [B,S,H]
+
+    # GLA mapping: khat = dt*B (per head), vhat = x, qhat = C
+    khat = dt[..., None] * bmat[:, :, None, :]                # [B,S,H,N]
+    qhat = jnp.broadcast_to(cmat[:, :, None, :], (b, s, h, n))
+    if cache is None:
+        y, hT = chunked_gla(qhat, khat, xin, log_decay, None, chunk=128)
+    else:
+        y, hT = gla_step(qhat[:, 0], khat[:, 0], xin[:, 0],
+                         log_decay[:, 0], cache["h"])
+        y = y[:, None]
+    new_cache = {"h": hT, "conv": new_conv}
+
+    y = y + cfg_skip(p, xin)
+    y = y.reshape(b, s, di).astype(x.dtype)
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                 p["norm_scale"], cfg.norm_eps)
+    out = linear(y, p["out_proj"], policy=policy, impl=impl)
+    return out, new_cache
+
+
+def cfg_skip(p, xin):
+    return (p["d_skip"][None, None, :, None] * xin.astype(jnp.float32))
+
+
+def init_mamba2_cache(cfg, batch):
+    return {
+        "h": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_state,
+                        cfg.ssm_headdim), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, _conv_channels(cfg)),
+                          jnp.float32),
+    }

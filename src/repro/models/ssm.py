@@ -1,0 +1,87 @@
+"""Chunked gated linear attention — shared recurrence engine for Mamba2 (SSD)
+and xLSTM's mLSTM.
+
+Both families are instances of
+
+    H_t = a_t * H_{t-1} + khat_t  vhat_t^T        (state [dk, dv] per head)
+    y_t = qhat_t @ H_t
+
+  * Mamba2/SSD:  a = exp(dt*A),  khat = dt*B_t,  vhat = x_t,  qhat = C_t
+  * mLSTM:       a = f_t,        khat = i_t*k_t, vhat = [v_t, 1] (normalizer
+                 column), qhat = q_t
+
+The chunked algorithm (SSD, Dao & Gu 2024) computes the quadratic form
+within chunks and carries the state across chunks — O(S*Q) memory instead
+of O(S^2) (or O(S * dk * dv) for a naive scan). All internal math is f32
+with log-space decay differences (numerical hygiene for low-precision
+training); projections around it are quantized per policy.
+
+``glu_step`` is the O(1) decode update used by serve_step at 500k context —
+the reason SSM/hybrid archs run the ``long_500k`` cell while pure-attention
+archs must skip it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["chunked_gla", "gla_step"]
+
+
+def chunked_gla(q, k, v, log_a, h0=None, *, chunk: int = 128):
+    """q,k [B,S,H,dk]; v [B,S,H,dv]; log_a [B,S,H] (<= 0).
+
+    Returns (y [B,S,H,dv], hT [B,H,dk,dv]).
+    """
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    if s % chunk:
+        chunk = s  # single chunk fallback (smoke shapes)
+    nc = s // chunk
+
+    q = q.astype(jnp.float32).reshape(b, nc, chunk, h, dk)
+    k = k.astype(jnp.float32).reshape(b, nc, chunk, h, dk)
+    v = v.astype(jnp.float32).reshape(b, nc, chunk, h, dv)
+    la = log_a.astype(jnp.float32).reshape(b, nc, chunk, h)
+
+    if h0 is None:
+        h0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def body(hprev, inp):
+        qc, kc, vc, lc = inp                       # [B,Q,H,*]
+        lcum = jnp.cumsum(lc, axis=1)              # within-chunk log decay
+        # intra-chunk quadratic term
+        att = jnp.einsum("bqhd,bjhd->bhqj", qc, kc)
+        diff = (lcum.transpose(0, 2, 1)[:, :, :, None]
+                - lcum.transpose(0, 2, 1)[:, :, None, :])  # [B,H,Q,Q]
+        dec = jnp.exp(jnp.where(causal[None, None], diff, -jnp.inf))
+        y_intra = jnp.einsum("bhqj,bjhv->bqhv", att * dec, vc)
+        # inter-chunk contribution from carried state
+        qdec = qc * jnp.exp(lcum)[..., None]
+        y_inter = jnp.einsum("bqhd,bhdv->bqhv", qdec, hprev)
+        # state update: decay to end of chunk
+        w = jnp.exp(lcum[:, -1:, :] - lcum)        # [B,Q,H]
+        dh = jnp.einsum("bjhd,bjhv->bhdv", kc * w[..., None], vc)
+        hnew = jnp.exp(lcum[:, -1, :])[..., None, None] * hprev + dh
+        return hnew, y_intra + y_inter
+
+    # scan over chunks (axis 1)
+    inp = (q.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1),
+           la.swapaxes(0, 1))
+    hT, ys = jax.lax.scan(body, h0, inp)
+    y = ys.swapaxes(0, 1).reshape(b, s, h, dv)
+    return y, hT
+
+
+def gla_step(q, k, v, log_a, h):
+    """Single-token decode update. q,k [B,H,dk]; v [B,H,dv]; log_a [B,H];
+    h [B,H,dk,dv]. Returns (y [B,H,dv], h')."""
+    q = q.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    a = jnp.exp(log_a.astype(jnp.float32))[..., None, None]
+    h = a * h + jnp.einsum("bhd,bhv->bhdv", k, v)
+    y = jnp.einsum("bhd,bhdv->bhv", q, h)
+    return y, h

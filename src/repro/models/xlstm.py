@@ -1,0 +1,169 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable —
+runs on the shared chunked-GLA engine) and sLSTM (scalar memory with true
+recurrent gate feedback — a sequential lax.scan).
+
+Simplifications recorded in DESIGN.md §5:
+  * mLSTM input gate uses sigmoid (not exp) — keeps the chunked form
+    stable in f32 without the paper's running max-stabilizer; the
+    normalizer column is kept, so outputs remain scale-invariant.
+  * sLSTM keeps the exponential gating + stabilizer state of the paper,
+    with block-diagonal (per-head) recurrent weights.
+
+Projections quantize per policy (expanding GEMM); all recurrent state is
+f32 (the accumulate-wide rule).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.linear import linear
+from .layers import rms_norm
+from .ssm import chunked_gla, gla_step
+
+__all__ = ["init_mlstm", "mlstm_block", "init_slstm", "slstm_block",
+           "init_mlstm_cache", "init_slstm_cache"]
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def _mlstm_dims(cfg):
+    di = 2 * cfg.d_model            # expansion 2
+    h = cfg.n_heads
+    p = di // h
+    return di, h, p
+
+
+def init_mlstm(key, cfg, dtype):
+    d = cfg.d_model
+    di, h, p = _mlstm_dims(cfg)
+    ks = jax.random.split(key, 6)
+    s = d ** -0.5
+    si = di ** -0.5
+    return {
+        "in_proj": jax.random.normal(ks[0], (d, 2 * di), dtype) * s,  # xm | z
+        "wq": jax.random.normal(ks[1], (di, di), dtype) * si,
+        "wk": jax.random.normal(ks[2], (di, di), dtype) * si,
+        "wv": jax.random.normal(ks[3], (di, di), dtype) * si,
+        "w_gates": jax.random.normal(ks[4], (di, 2 * h), jnp.float32) * si,
+        "b_gates": jnp.concatenate([jnp.zeros((h,)), 3.0 * jnp.ones((h,))]),
+        "norm_scale": jnp.ones((di,), dtype),
+        "out_proj": jax.random.normal(ks[5], (di, d), dtype) * si,
+    }
+
+
+def mlstm_block(x, p, cfg, policy, *, cache=None, rules=None, impl="auto"):
+    b, s, d = x.shape
+    di, h, pd = _mlstm_dims(cfg)
+    proj = linear(x, p["in_proj"], policy=policy, impl=impl)
+    xm, z = proj[..., :di], proj[..., di:]
+
+    q = linear(xm, p["wq"], policy=policy, impl=impl).reshape(b, s, h, pd)
+    k = linear(xm, p["wk"], policy=policy, impl=impl).reshape(b, s, h, pd)
+    v = linear(xm, p["wv"], policy=policy, impl=impl).reshape(b, s, h, pd)
+    k = k * (pd ** -0.5)
+
+    gates = jnp.dot(xm.astype(jnp.float32), p["w_gates"]) + p["b_gates"]
+    ig = jax.nn.sigmoid(gates[..., :h])            # [B,S,H]
+    log_f = jax.nn.log_sigmoid(gates[..., h:])     # [B,S,H] <= 0
+
+    khat = k.astype(jnp.float32) * ig[..., None]
+    # normalizer column: v_aug = [v, 1]
+    v_aug = jnp.concatenate(
+        [v.astype(jnp.float32), jnp.ones((b, s, h, 1), jnp.float32)], -1)
+
+    if cache is None:
+        y, hT = chunked_gla(q, khat, v_aug, log_f, None, chunk=128)
+    else:
+        y, hT = gla_step(q[:, 0], khat[:, 0], v_aug[:, 0], log_f[:, 0],
+                         cache["h"])
+        y = y[:, None]
+    new_cache = {"h": hT}
+
+    num, den = y[..., :pd], y[..., pd:]
+    y = num / jnp.maximum(jnp.abs(den), 1.0)
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = rms_norm(y, p["norm_scale"], cfg.norm_eps)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    return linear(y, p["out_proj"], policy=policy, impl=impl), new_cache
+
+
+def init_mlstm_cache(cfg, batch):
+    di, h, pd = _mlstm_dims(cfg)
+    return {"h": jnp.zeros((batch, h, pd, pd + 1), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (sequential, exponential gating with stabilizer)
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg, dtype):
+    d = cfg.d_model
+    h = cfg.n_heads
+    pd = d // h
+    ks = jax.random.split(key, 3)
+    s = d ** -0.5
+    return {
+        # input projections for z,i,f,o stacked: [D, 4D]
+        "w_in": jax.random.normal(ks[0], (d, 4 * d), dtype) * s,
+        # block-diagonal recurrent weights per head: [4, H, P, P]
+        "r": jax.random.normal(ks[1], (4, h, pd, pd), jnp.float32) * (pd ** -0.5),
+        "b": jnp.concatenate([jnp.zeros((2 * d,)), 3.0 * jnp.ones((d,)),
+                              jnp.zeros((d,))]),
+        "norm_scale": jnp.ones((d,), dtype),
+        "out_proj": jax.random.normal(ks[2], (d, d), dtype) * s,
+    }
+
+
+def _slstm_cell(carry, zifo_t, r, h_heads, pd):
+    """One sLSTM step. carry = (hprev [B,D], c, n, m); zifo_t [B,4D]."""
+    hprev, c, n, m = carry
+    b, d = hprev.shape
+    hh = hprev.reshape(b, h_heads, pd)
+    rec = jnp.einsum("bhp,ghpq->bghq", hh, r).reshape(b, 4, d)
+    zr, ir, fr, orr = [zifo_t[:, i * d:(i + 1) * d] + rec[:, i]
+                       for i in range(4)]
+    z = jnp.tanh(zr)
+    log_i = ir
+    log_f = jax.nn.log_sigmoid(fr)
+    mnew = jnp.maximum(log_f + m, log_i)           # stabilizer
+    ip = jnp.exp(log_i - mnew)
+    fp = jnp.exp(log_f + m - mnew)
+    c = fp * c + ip * z
+    n = fp * n + ip
+    hout = jax.nn.sigmoid(orr) * c / jnp.maximum(jnp.abs(n), 1.0)
+    return (hout, c, n, mnew), hout
+
+
+def slstm_block(x, p, cfg, policy, *, cache=None, rules=None, impl="auto"):
+    b, s, d = x.shape
+    h = cfg.n_heads
+    pd = d // h
+    zifo = linear(x, p["w_in"], policy=policy, impl=impl)
+    zifo = zifo.astype(jnp.float32) + p["b"]
+
+    if cache is None:
+        carry0 = tuple(jnp.zeros((b, d), jnp.float32) for _ in range(3)) + (
+            jnp.full((b, d), -1e9, jnp.float32),)
+        carry0 = (carry0[0], carry0[1], carry0[2], carry0[3])
+        cell = lambda cr, zt: _slstm_cell(cr, zt, p["r"], h, pd)
+        carry, ys = jax.lax.scan(cell, carry0, zifo.swapaxes(0, 1))
+        y = ys.swapaxes(0, 1)
+    else:
+        carry0 = (cache["hid"], cache["c"], cache["n"], cache["m"])
+        carry, y1 = _slstm_cell(carry0, zifo[:, 0], p["r"], h, pd)
+        y = y1[:, None]
+    new_cache = {"hid": carry[0], "c": carry[1], "n": carry[2], "m": carry[3]}
+
+    y = rms_norm(y.astype(x.dtype), p["norm_scale"], cfg.norm_eps)
+    return linear(y, p["out_proj"], policy=policy, impl=impl), new_cache
+
+
+def init_slstm_cache(cfg, batch):
+    d = cfg.d_model
+    return {"hid": jnp.zeros((batch, d), jnp.float32),
+            "c": jnp.zeros((batch, d), jnp.float32),
+            "n": jnp.zeros((batch, d), jnp.float32),
+            "m": jnp.full((batch, d), -1e9, jnp.float32)}

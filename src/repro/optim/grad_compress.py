@@ -1,0 +1,77 @@
+"""FP8-compressed cross-replica gradient reduction with error feedback.
+
+The paper's thesis — ship narrow, accumulate wide — applied to the
+*network*: gradients are quantized to FP8-E5M2 (per-leaf scale) before the
+data-parallel reduction, halving/quartering ICI-DCN bytes; partial sums are
+accumulated in f32 (expanding accumulation); the quantization residual is
+carried to the next step (error feedback), which keeps SGD convergence
+unbiased to first order.
+
+Built on shard_map so the collective is explicit: used by the DDP-style
+trainer variant and by the cross-pod stage of the hierarchical reduction
+(within-pod reductions stay full precision — they're cheap on ICI; the
+pod axis is the slow hop that benefits).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+__all__ = ["compressed_psum_mean", "error_feedback_init"]
+
+
+def error_feedback_init(grads):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def _quantize_leaf(g, q_dtype):
+    amax = jnp.max(jnp.abs(g))
+    maxn = jnp.float32(jnp.finfo(q_dtype).max)
+    s = jnp.where(amax > 0, amax / maxn, 1.0)
+    return (g / s).astype(q_dtype), s
+
+
+def compressed_psum_mean(grads, ef, mesh: Mesh, axis: str,
+                         q_dtype=jnp.float8_e5m2):
+    """Mean-reduce ``grads`` over mesh axis ``axis`` in compressed form.
+
+    grads: tree of f32 leaves, identical (replica-local) on every member of
+    ``axis``. ef: error-feedback tree (same shapes, f32). Returns
+    (reduced_grads_f32, new_ef).
+
+    Inside the shard_map: g+ef is quantized to q_dtype, all-gathered in
+    narrow form, de-quantized and accumulated f32 (expanding accumulation),
+    and the local quantization error becomes the new ef.
+    """
+    n = mesh.shape[axis]
+
+    def leaf_fn(g, e):
+        gc = g.astype(jnp.float32) + e
+        q, s = _quantize_leaf(gc, q_dtype)
+        new_e = gc - q.astype(jnp.float32) * s
+        # narrow all-gather (the compressed wire format), f32 accumulate
+        qs = jax.lax.all_gather(q, axis)            # [n, ...] narrow
+        ss = jax.lax.all_gather(s, axis)            # [n] scales
+        red = jnp.tensordot(ss, qs.astype(jnp.float32), axes=((0,), (0,)))
+        return red / n, new_e
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = jax.tree_util.tree_flatten(ef)[0]
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(tuple(P() for _ in flat_g), tuple(P() for _ in flat_e)),
+        out_specs=(tuple(P() for _ in flat_g), tuple(P() for _ in flat_e)),
+        check_vma=False)
+    def run_flat(gs, es):
+        outs = [leaf_fn(g, e) for g, e in zip(gs, es)]
+        return tuple(o[0] for o in outs), tuple(o[1] for o in outs)
+
+    red, new_ef = run_flat(tuple(flat_g), tuple(flat_e))
+    return (jax.tree_util.tree_unflatten(treedef, list(red)),
+            jax.tree_util.tree_unflatten(treedef, list(new_ef)))

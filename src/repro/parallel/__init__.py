@@ -1,0 +1,1 @@
+from .sharding import MeshRules, param_pspecs, batch_pspec, make_rules

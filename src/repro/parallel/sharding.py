@@ -1,0 +1,198 @@
+"""Sharding rules: logical-axis mapping for activations and parameters.
+
+Mesh axes (launch/mesh.py):
+  * ``pod``   — optional outer data-parallel axis across pods (ICI/DCN)
+  * ``data``  — data parallel + ZeRO/FSDP parameter sharding
+  * ``model`` — tensor/expert parallel (Megatron-style)
+
+Parameter rules are matched by path substring, most-specific first. Every
+2D+ parameter is additionally FSDP-sharded along its non-TP dimension over
+``data`` so that optimizer state is fully partitioned (ZeRO-3); gradients
+then reduce-scatter instead of all-reduce automatically under GSPMD.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["MeshRules", "make_rules", "param_pspecs", "batch_pspec"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshRules:
+    mesh: Optional[Mesh]
+    batch_axes: tuple  # axes a batch dim shards over, e.g. ('pod', 'data')
+    fsdp_axis: Optional[str] = "data"
+    model_axis: Optional[str] = "model"
+    #: shard sequence dim over the model axis (sequence parallelism) —
+    #: used for long-context cells where batch can't be sharded.
+    seq_shard: bool = False
+
+    def _axis(self, logical):
+        return {
+            "batch": self.batch_axes,
+            "embed": None,
+            "seq": self.model_axis if self.seq_shard else None,
+            "heads": self.model_axis,
+            "kv_heads": self.model_axis,
+            "ff": self.model_axis,
+            "vocab": self.model_axis,
+            "experts": self.model_axis,
+            None: None,
+        }[logical]
+
+    @property
+    def model_size(self) -> int:
+        if self.mesh is None or self.model_axis not in self.mesh.axis_names:
+            return 1
+        return self.mesh.shape[self.model_axis]
+
+    def act(self, x, *logical):
+        """Constrain activation ``x`` whose dims carry the logical names.
+        Dims not divisible by their target axis are left unconstrained
+        (GSPMD would otherwise pad + full-remat on transitions)."""
+        if self.mesh is None:
+            return x
+        axes = []
+        for i, n in enumerate(logical):
+            a = self._axis(n)
+            if a is not None:
+                size = 1
+                for ax in ((a,) if isinstance(a, str) else a):
+                    size *= self.mesh.shape[ax]
+                if x.shape[i] % size:
+                    a = None
+            axes.append(a)
+        spec = P(*axes)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+    def logits(self, x):
+        return self.act(x, "batch", None, "vocab")
+
+    def gather_seq(self, x):
+        """Megatron-SP g-bar: all-gather the seq dim on the forward pass,
+        reduce-scatter the cotangent on the backward pass. A plain
+        with_sharding_constraint would constrain the cotangent to the
+        *forward* (unsharded) spec, forcing a 2x-wire all-reduce of every
+        dgrad partial sum (§Perf D3)."""
+        if self.mesh is None or not self.seq_shard:
+            return x
+        return _gather_seq_cv(x, self)
+
+
+def _gather_seq_cv(x, rules: "MeshRules"):
+    def fwd_c(v):
+        # the barrier pins the gather to THIS (bf16) tensor — without it
+        # GSPMD hoists the gather into the f32 interior of the fused
+        # norm/quantize chain, doubling wire bytes (§Perf D4)
+        v = jax.lax.optimization_barrier(v)
+        return rules.act(v, "batch", None, None)
+
+    def bwd_c(v):
+        v = jax.lax.optimization_barrier(v)
+        return rules.act(v, "batch", "seq", None)
+
+    @jax.custom_vjp
+    def g(v):
+        return fwd_c(v)
+
+    def g_fwd(v):
+        return fwd_c(v), None
+
+    def g_bwd(_, ct):
+        return (bwd_c(ct),)
+
+    g.defvjp(g_fwd, g_bwd)
+    return g(x)
+
+
+def make_rules(mesh: Optional[Mesh], *, seq_shard: bool = False) -> MeshRules:
+    if mesh is None:
+        return MeshRules(None, ("data",))
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    fsdp = "data" if "data" in mesh.axis_names else None
+    model = "model" if "model" in mesh.axis_names else None
+    return MeshRules(mesh, batch_axes, fsdp, model, seq_shard)
+
+
+# --------------------------------------------------------------------------
+# Parameter partition rules. Path is the '/'-joined tree path. ``L`` marks
+# the stacked-layer leading dim (never sharded). F = fsdp ('data'),
+# M = model. Order matters: first match wins.
+# --------------------------------------------------------------------------
+_PARAM_RULES: Sequence[tuple[str, tuple]] = (
+    # MoE expert weights [L, E, D, F] / [L, E, F, D]: experts over model,
+    # FSDP over the dim-2.
+    (r"experts.*(w_in|w_gate|w_up)", ("L", "M", "F", None)),
+    (r"experts.*w_out", ("L", "M", None, "F")),
+    (r"router", ("L", "F", None)),
+    # attention projections [L, D, H*hd] (col-parallel) / [L, H*hd, D] (row)
+    (r"(wq|wk|wv|in_proj|qkv)", ("L", "F", "M")),
+    (r"(wo|out_proj)", ("L", "M", "F")),
+    # MLP [L, D, F] col-parallel, [L, F, D] row-parallel
+    (r"(w_gate|w_up|w_in)", ("L", "F", "M")),
+    (r"(w_down|w_out)", ("L", "M", "F")),
+    # embeddings [V, D]: vocab over model (Megatron vocab-parallel), D fsdp
+    (r"(embed|lm_head|patch_proj|frame_proj)", ("M", "F")),
+    # mamba/xlstm extras: conv kernels, gates, per-head params — replicate
+    # except large 2D which fall through to the generic rule below.
+)
+
+
+def _spec_for(path: str, shape, stacked: bool, axis_sizes) -> P:
+    ndim = len(shape)
+
+    def fit(axis, dim):
+        """Drop shardings that don't divide the dim (jit in_shardings
+        require exact divisibility, unlike internal constraints)."""
+        if axis is None:
+            return None
+        size = axis_sizes.get(axis, 1)
+        return axis if (size > 1 and dim % size == 0 and dim >= size) else None
+
+    for pat, logical in _PARAM_RULES:
+        if re.search(pat, path):
+            # strip the 'L' slot and right-align the remaining logical dims
+            # onto the trailing axes — models may stack params under any
+            # number of leading scan dims (layers, groups x per-group, ...)
+            log = [a for a in logical if a != "L"]
+            log = log[-ndim:] if len(log) > ndim else log
+            axes = [None] * (ndim - len(log)) + [
+                "data" if a == "F" else "model" if a == "M" else None
+                for a in log]
+            axes = [fit(a, shape[i]) for i, a in enumerate(axes)]
+            return P(*axes)
+    # generic fallback: FSDP-shard the largest dim of big tensors
+    if ndim >= 2 and max(shape) >= 1024:
+        axes = [None] * ndim
+        i = int(max(range(ndim), key=lambda j: shape[j]))
+        axes[i] = fit("data", shape[i])
+        return P(*axes)
+    return P()
+
+
+def param_pspecs(params_shapes, mesh=None) -> object:
+    """Build a PartitionSpec tree matching a params(-shape) tree.
+
+    Rules are right-aligned onto trailing dims, so any number of leading
+    scan-stack dims (layers / groups x per-group) is handled uniformly.
+    """
+    axis_sizes = dict(mesh.shape) if mesh is not None else {
+        "data": 1, "model": 1}
+
+    def to_spec(path, leaf):
+        pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        return _spec_for(pstr, leaf.shape, stacked=False,
+                         axis_sizes=axis_sizes)
+
+    return jax.tree_util.tree_map_with_path(to_spec, params_shapes)
+
+
+def batch_pspec(rules: MeshRules) -> P:
+    return P(rules.batch_axes)

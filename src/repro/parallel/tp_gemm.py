@@ -1,0 +1,334 @@
+"""Explicit tensor-parallel GEMMs with narrow-wire collectives.
+
+The paper's rule — *ship narrow, accumulate wide, round once* — applied to
+the TP/SP/ZeRO interconnect (§Perf D5/D6, the flagship beyond-paper
+optimization). Fully-manual shard_map over (batch-axes..., model):
+
+  column-parallel (QKV / MLP-in), x sequence-sharded:
+    fwd:  quantize local -> **fp8 all-gather** of activations (4x less wire
+          than the f32 gathers GSPMD emits) -> dequant -> f32-accum GEMM
+    bwd:  grads quantize to E5M2; dgrad partials ship **bf16 all-to-all**
+          and accumulate **f32 locally** (wire of a reduce-scatter, the
+          numerics of an ExSdotp chain across chips); wgrad contracts
+          locally and reduce-scatters over the data axis the same
+          narrow-wire way — this *is* the ZeRO gradient reduction.
+
+  row-parallel (attn-out / MLP-down), input model-sharded on features:
+    fwd:  local GEMM -> bf16 a2a + f32 local sum -> sequence-sharded out
+    bwd:  fp8-E5M2 gather of grads; dgrad local; wgrad as above.
+
+(XLA CPU aborts on bf16 wire-reduce collectives, and a wire-reduce would
+accumulate narrow anyway — a2a + local f32 sum is both portable and
+numerically stronger.)
+
+FSDP weight shards are all-gathered bf16 inside (tiny vs activations).
+Everything else in the model stays under GSPMD; boundaries are layout
+no-ops.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import PartitionSpec as P
+
+from ..core.policy import Policy
+
+__all__ = ["tp_column_linear", "tp_row_linear", "tp_applicable",
+           "row_applicable", "make_fsdp_gather", "embed_lookup_ep",
+           "embed_ep_applicable"]
+
+
+def _quant_local(x, dtype):
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf))
+    s = jnp.where(amax > 0, amax / jnp.float32(jnp.finfo(dtype).max), 1.0)
+    return (xf / s).astype(dtype), s
+
+
+def _a2a_sum(partial_f32, axis, n, dim, wire_dtype=jnp.bfloat16):
+    """Ship narrow partials all-to-all along ``dim``, accumulate f32.
+
+    With ``wire_dtype`` fp8 (§Perf D8), each source quantizes its partial
+    with a private scale that rides along (n floats) — the wire halves
+    again and the receiver still accumulates f32 (ExSdotp on the wire,
+    now at the paper's own operand width).
+    """
+    sh = partial_f32.shape
+    split = sh[dim] // n
+    if jnp.dtype(wire_dtype).itemsize == 1:
+        amax = jnp.max(jnp.abs(partial_f32))
+        s = jnp.where(amax > 0,
+                      amax / jnp.float32(jnp.finfo(wire_dtype).max), 1.0)
+        yp = (partial_f32 / s).astype(wire_dtype).reshape(
+            *sh[:dim], n, split, *sh[dim + 1:])
+        recv = jax.lax.all_to_all(yp, axis, split_axis=dim,
+                                  concat_axis=dim, tiled=True)
+        ss = jax.lax.all_gather(s.reshape(1), axis, axis=0, tiled=True)
+        shape_bc = [1] * recv.ndim
+        shape_bc[dim] = n
+        return jnp.sum(recv.astype(jnp.float32)
+                       * ss.reshape(shape_bc), axis=dim)
+    yp = partial_f32.astype(wire_dtype).reshape(
+        *sh[:dim], n, split, *sh[dim + 1:])
+    recv = jax.lax.all_to_all(yp, axis, split_axis=dim, concat_axis=dim,
+                              tiled=True)
+    return jnp.sum(recv.astype(jnp.float32), axis=dim)
+
+
+def _grad_reduce_data(dw_f32, rules):
+    """ZeRO gradient reduction over the data axis: bf16 a2a + f32 local
+    accumulation, landing FSDP-sharded on dim 0 (matches the param spec);
+    plus an f32 psum over the pod axis when present."""
+    n = rules.mesh.shape[rules.fsdp_axis]
+    dw = _a2a_sum(dw_f32, rules.fsdp_axis, n, 0)
+    if "pod" in rules.mesh.axis_names:
+        dw = jax.lax.psum(dw, "pod")
+    return dw
+
+
+def _axes(rules):
+    ba = rules.batch_axes
+    return ba, rules.model_axis, rules.model_size
+
+
+def make_fsdp_gather(rules, dim: int):
+    """ZeRO-3 weight gather for use INSIDE manual shard_map regions:
+    bf16 all-gather forward; backward = the narrow-wire gradient
+    reduce-scatter (bf16 a2a + f32 local accumulation, f32 psum across
+    pods). Avoids jax's default transpose (bf16 psum_scatter), which both
+    accumulates narrow and aborts XLA CPU."""
+    axis = rules.fsdp_axis
+    n = rules.mesh.shape[axis]
+
+    @jax.custom_vjp
+    def g(w):
+        return jax.lax.all_gather(w, axis, axis=dim, tiled=True)
+
+    def fwd(w):
+        return g(w), None
+
+    def bwd(_, ct):
+        dw = _a2a_sum(ct.astype(jnp.float32), axis, n, dim)
+        if "pod" in rules.mesh.axis_names:
+            dw = jax.lax.psum(dw, "pod")
+        return (dw.astype(ct.dtype),)
+
+    g.defvjp(fwd, bwd)
+    return g
+
+
+def tp_applicable(x, rules, policy: Policy) -> bool:
+    if rules is None or rules.mesh is None or not rules.seq_shard:
+        return False
+    if not getattr(policy, "quantized", False) or x.ndim != 3:
+        return False
+    if rules.fsdp_axis not in rules.mesh.axis_names:
+        return False
+    tp = rules.model_size
+    dp = 1
+    for a in rules.batch_axes:
+        dp *= rules.mesh.shape[a]
+    return (tp > 1 and x.shape[1] % tp == 0 and x.shape[1] >= tp
+            and x.shape[0] % dp == 0)
+
+
+row_applicable = tp_applicable  # same preconditions (checked on block input)
+
+
+# ---------------------------------------------------------------- column --
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def tp_column_linear(x, w, policy: Policy, rules):
+    y, _ = _tp_col_fwd(x, w, policy, rules)
+    return y
+
+
+def _tp_col_fwd(x, w, policy, rules):
+    ba, axis, tp = _axes(rules)
+    cd = policy.compute_dtype
+    manual = set(ba) | {axis, rules.fsdp_axis}
+
+    @functools.partial(
+        shard_map, mesh=rules.mesh,
+        in_specs=(P(ba, axis, None), P(rules.fsdp_axis, axis)),
+        out_specs=(P(ba, None, axis), P(ba, axis, None), P(ba + (axis,))),
+        axis_names=manual, check_vma=False)
+    def fwd(xl, wl):
+        wg = jax.lax.all_gather(wl, rules.fsdp_axis, axis=0, tiled=True)
+        xq, sx = _quant_local(xl, policy.fwd_dtype)
+        wq, sw = _quant_local(wg, policy.fwd_dtype)
+        xg = jax.lax.all_gather(xq, axis, axis=1, tiled=True)   # fp8 wire
+        ss = jax.lax.all_gather(sx.reshape(1), axis, axis=0, tiled=True)
+        sx_full = jnp.repeat(ss, xl.shape[1])[None, :, None]
+        y = jnp.dot(xg.astype(jnp.float32) * sx_full,
+                    wq.astype(jnp.float32) * sw,
+                    preferred_element_type=jnp.float32)
+        return y.astype(cd), xq, (sx * sw).reshape(1)
+
+    # residuals: the *local* fp8 activations + combined scale (weights are
+    # cheap to re-quantize in bwd; activations are not)
+    y, xq, sxw = fwd(x, w)
+    return y, (xq, sxw, w)
+
+
+def _tp_col_bwd(policy, rules, res, g):
+    ba, axis, tp = _axes(rules)
+    xq, sxw, w = res
+    cd = policy.compute_dtype
+    manual = set(ba) | {axis, rules.fsdp_axis}
+
+    @functools.partial(
+        shard_map, mesh=rules.mesh,
+        in_specs=(P(ba, axis, None), P(ba + (axis,)),
+                  P(rules.fsdp_axis, axis), P(ba, None, axis)),
+        out_specs=(P(ba, axis, None), P(rules.fsdp_axis, axis)),
+        axis_names=manual, check_vma=False)
+    def bwd(xql, sxwl, wl, gl):
+        wg = jax.lax.all_gather(wl, rules.fsdp_axis, axis=0, tiled=True)
+        wq, sw = _quant_local(wg, policy.fwd_dtype)
+        gq, sg = _quant_local(gl, policy.bwd_dtype)              # E5M2
+        gf = gq.astype(jnp.float32) * sg
+        # dgrad: partial over model (N split) -> back to seq shards
+        dpart = jnp.dot(gf, (wq.astype(jnp.float32) * sw).T,
+                        preferred_element_type=jnp.float32)
+        dx = _a2a_sum(dpart, axis, tp, 1).astype(cd)
+        # wgrad: re-gather fp8 activations; contract local tokens; then
+        # narrow-wire ZeRO reduce-scatter over data
+        xg = jax.lax.all_gather(xql, axis, axis=1, tiled=True)
+        ss = jax.lax.all_gather(sxwl, axis, axis=0, tiled=True)
+        # sxwl = sx*sw; undo sw so x dequantizes correctly
+        sxf = jnp.repeat(ss / sw, xql.shape[1])[None, :, None]
+        dwl = jnp.einsum("bsk,bsn->kn", xg.astype(jnp.float32) * sxf, gf,
+                         preferred_element_type=jnp.float32)
+        dw = _grad_reduce_data(dwl, rules).astype(cd)
+        return dx, dw
+
+    dx, dw = bwd(xq, sxw, w, g)
+    return dx, dw
+
+
+tp_column_linear.defvjp(_tp_col_fwd, _tp_col_bwd)
+
+
+# ------------------------------------------------------------------- row --
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def tp_row_linear(x, w, policy: Policy, rules):
+    y, _ = _tp_row_fwd(x, w, policy, rules)
+    return y
+
+
+def _tp_row_fwd(x, w, policy, rules):
+    ba, axis, tp = _axes(rules)
+    cd = policy.compute_dtype
+    manual = set(ba) | {axis, rules.fsdp_axis}
+
+    @functools.partial(
+        shard_map, mesh=rules.mesh,
+        in_specs=(P(ba, None, axis), P(axis, rules.fsdp_axis)),
+        out_specs=(P(ba, axis, None), P(ba, None, axis), P(ba + (axis,))),
+        axis_names=manual, check_vma=False)
+    def fwd(xl, wl):
+        wg = jax.lax.all_gather(wl, rules.fsdp_axis, axis=1, tiled=True)
+        xq, sx = _quant_local(xl, policy.fwd_dtype)
+        wq, sw = _quant_local(wg, policy.fwd_dtype)
+        part = jnp.dot(xq.astype(jnp.float32) * sx,
+                       wq.astype(jnp.float32) * sw,
+                       preferred_element_type=jnp.float32)
+        # D8: forward activations ship at the paper's operand width (fp8,
+        # per-source scales); the receiver accumulates f32. Gradient-path
+        # reductions stay bf16 (one fewer rounding on the sensitive path).
+        y = _a2a_sum(part, axis, tp, 1, wire_dtype=policy.fwd_dtype)
+        return y.astype(cd), xq, sx.reshape(1)
+
+    y, xq, sx = fwd(x, w)
+    return y, (xq, sx, w)
+
+
+def _tp_row_bwd(policy, rules, res, g):
+    ba, axis, tp = _axes(rules)
+    xq, sx, w = res
+    cd = policy.compute_dtype
+    manual = set(ba) | {axis, rules.fsdp_axis}
+
+    @functools.partial(
+        shard_map, mesh=rules.mesh,
+        in_specs=(P(ba, None, axis), P(ba + (axis,)),
+                  P(axis, rules.fsdp_axis), P(ba, axis, None)),
+        out_specs=(P(ba, None, axis), P(axis, rules.fsdp_axis)),
+        axis_names=manual, check_vma=False)
+    def bwd(xql, sxl, wl, gl):
+        wg = jax.lax.all_gather(wl, rules.fsdp_axis, axis=1, tiled=True)
+        wq, sw = _quant_local(wg, policy.fwd_dtype)
+        gq, sg = _quant_local(gl, policy.bwd_dtype)              # E5M2
+        gg = jax.lax.all_gather(gq, axis, axis=1, tiled=True)    # fp8 wire
+        ss = jax.lax.all_gather(sg.reshape(1), axis, axis=0, tiled=True)
+        sgf = jnp.repeat(ss, gl.shape[1])[None, :, None]
+        gf = gg.astype(jnp.float32) * sgf                        # [B,S,K]
+        dx = jnp.dot(gf, (wq.astype(jnp.float32) * sw).T,
+                     preferred_element_type=jnp.float32).astype(cd)
+        dwl = jnp.einsum("bsn,bsk->nk",
+                         xql.astype(jnp.float32) * sxl[0], gf,
+                         preferred_element_type=jnp.float32)
+        # ZeRO reduce over data lands on dim1 (w is [N_model, K_fsdp])
+        n_dp = rules.mesh.shape[rules.fsdp_axis]
+        dw = _a2a_sum(dwl, rules.fsdp_axis, n_dp, 1)
+        if "pod" in rules.mesh.axis_names:
+            dw = jax.lax.psum(dw, "pod")
+        return dx, dw.astype(cd)
+
+    dx, dw = bwd(xq, sx, w, g)
+    return dx, dw
+
+
+tp_row_linear.defvjp(_tp_row_fwd, _tp_row_bwd)
+
+
+# ------------------------------------------------------------- embedding --
+
+def embed_ep_applicable(tokens, table, rules) -> bool:
+    if rules is None or rules.mesh is None or not rules.seq_shard:
+        return False
+    tp = rules.model_size
+    dp = 1
+    for a in rules.batch_axes:
+        dp *= rules.mesh.shape[a]
+    return (tp > 1 and tokens.ndim == 2 and table.shape[0] % tp == 0
+            and tokens.shape[1] % tp == 0 and tokens.shape[0] % dp == 0
+            and table.shape[1] % rules.mesh.shape[rules.fsdp_axis] == 0)
+
+
+def embed_lookup_ep(table, tokens, rules):
+    """Vocab-parallel embedding lookup (§Perf G3).
+
+    GSPMD lowers ``table[tokens]`` on a vocab-sharded table by REPLICATING
+    the table ("involuntary full rematerialization"). Here each model
+    shard looks up only its vocab slice (zeros elsewhere) and the partial
+    rows are summed via the narrow-wire a2a, landing directly in the
+    sequence-parallel layout the first block wants.
+    """
+    mesh, axis, tp = rules.mesh, rules.model_axis, rules.model_size
+    ba = rules.batch_axes
+    manual = set(ba) | {axis, rules.fsdp_axis}
+    gather_d = make_fsdp_gather(rules, dim=1)
+    vloc = table.shape[0] // tp
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(P(axis, rules.fsdp_axis), P(ba, None)),
+        out_specs=P(ba, axis, None),
+        axis_names=manual, check_vma=False)
+    def f(tbl_l, tok_l):
+        tbl = gather_d(tbl_l)                       # [V/tp, D] bf16
+        off = jax.lax.axis_index(axis) * vloc
+        idx = tok_l - off
+        ok = (idx >= 0) & (idx < vloc)
+        vals = jnp.where(ok[..., None],
+                         tbl[jnp.clip(idx, 0, vloc - 1)], 0)
+        y = _a2a_sum(vals.astype(jnp.float32), axis, tp, 1)
+        return y.astype(tbl_l.dtype)
+
+    return f(table, tokens)

@@ -1,0 +1,62 @@
+"""Serving: batched prefill + single-token decode steps (pjit-ready).
+
+``serve_step`` is what the ``decode_*``/``long_*`` dry-run cells lower:
+one new token against a KV/state cache of ``seq_len``. Sampling is greedy
+or temperature-categorical; generation loops on the host (one jitted step
+per token) exactly like a production decode server.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["make_serve_fns", "generate"]
+
+
+def make_serve_fns(model, *, rules=None, impl: str = "auto"):
+    def prefill(params, tokens, cache, aux=None):
+        """Teacher-forced prefill producing logits; for cache-filling
+        prefill, decode_step is called per position (enc-dec archs fill
+        cross-attn caches via model.prefill_cache)."""
+        logits, _ = model.apply(params, tokens, aux=aux, rules=rules,
+                                impl=impl)
+        return logits
+
+    def serve_step(params, tok, cache):
+        """One new token [B] against the current cache -> (logits, cache)."""
+        return model.decode_step(params, tok, cache, rules=rules, impl=impl)
+
+    return prefill, serve_step
+
+
+def generate(model, params, prompt, *, max_new_tokens: int, max_len: int,
+             temperature: float = 0.0, key=None, rules=None,
+             impl: str = "auto", aux=None):
+    """Greedy/temperature decoding from a [B, S] prompt."""
+    b, s = prompt.shape
+    cache = model.init_cache(b, max_len)
+    if model.cfg.family == "encdec" and aux is not None:
+        cache = model.prefill_cache(params, aux["frames"], cache,
+                                    rules=rules, impl=impl)
+    step = jax.jit(functools.partial(model.decode_step, rules=rules,
+                                     impl=impl))
+    # feed the prompt token by token (cache fill)
+    logits = None
+    for i in range(s):
+        logits, cache = step(params, prompt[:, i], cache)
+    toks = []
+    tok = None
+    for i in range(max_new_tokens):
+        if temperature > 0.0:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(sub,
+                                         logits.astype(jnp.float32)
+                                         / temperature, axis=-1)
+        else:
+            tok = jnp.argmax(logits, axis=-1)
+        toks.append(tok)
+        logits, cache = step(params, tok, cache)
+    return jnp.stack(toks, axis=1)

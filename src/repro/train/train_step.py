@@ -1,0 +1,113 @@
+"""train_step factory: loss scaling + microbatch accumulation + AdamW,
+pjit-ready (shardings supplied by the launcher).
+
+TrainState pytree:
+    params     — compute-dtype weights (bf16 under HFP8)
+    opt        — AdamW state (master + moments, f32 or narrow)
+    lscale     — dynamic loss-scale state (present iff policy.loss_scaling)
+    rng        — PRNG key (stochastic rounding, future dropout)
+
+The step:
+  1. (scan over microbatches) f32 gradient accumulation — the "expanding
+     accumulation" rule applied at the gradient level;
+  2. unscale + finite check -> maybe-skip (fault-tolerant numerics);
+  3. global clip + AdamW with wide arithmetic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.policy import get_policy
+from ..core.scaling import loss_scale_init, check_and_update_scale
+from ..optim.adamw import AdamWConfig, adamw_init, adamw_update
+
+__all__ = ["make_train_state", "make_train_step"]
+
+
+def make_train_state(model, key, opt_cfg: AdamWConfig):
+    params = model.init(key)
+    policy = get_policy(model.cfg.policy_name)
+    state = {
+        "params": params,
+        "opt": adamw_init(params, opt_cfg),
+        "rng": jax.random.key_data(jax.random.key(0)),
+    }
+    if policy.loss_scaling:
+        state["lscale"] = loss_scale_init()
+    return state
+
+
+def make_train_step(model, opt_cfg: AdamWConfig, *, microbatches: int = 1,
+                    rules=None, impl: str = "auto", remat: bool = True):
+    policy = get_policy(model.cfg.policy_name)
+
+    def train_step(state, tokens, aux=None):
+        params = state["params"]
+        scale = (state["lscale"]["scale"] if policy.loss_scaling
+                 else jnp.float32(1.0))
+
+        def loss_fn(p, toks, a):
+            return model.loss(p, toks, aux=a, rules=rules, impl=impl,
+                              remat=remat) * scale
+
+        if microbatches > 1:
+            gb = tokens.shape[0]
+            mb = gb // microbatches
+            toks = tokens.reshape(microbatches, mb, *tokens.shape[1:])
+            auxs = (jax.tree.map(
+                lambda x: x.reshape(microbatches, mb, *x.shape[1:]), aux)
+                if aux is not None else None)
+
+            def acc_body(carry, inp):
+                gacc, lacc = carry
+                t = inp[0]
+                a = inp[1] if auxs is not None else None
+                l, g = jax.value_and_grad(loss_fn)(params, t, a)
+                gacc = jax.tree.map(
+                    lambda ga, gi: ga + gi.astype(jnp.float32), gacc, g)
+                return (gacc, lacc + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            inp = (toks, auxs) if auxs is not None else (toks,)
+            (grads, loss), _ = jax.lax.scan(acc_body, (g0, jnp.float32(0)),
+                                            inp)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss / microbatches
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, tokens, aux)
+
+        metrics = {}
+        if policy.loss_scaling:
+            grads, new_ls, skip = check_and_update_scale(
+                state["lscale"], grads)
+            metrics["loss_scale"] = new_ls["scale"]
+            metrics["skipped"] = skip.astype(jnp.int32)
+        else:
+            new_ls, skip = None, None
+            # still guard against stray non-finite grads at scale
+            finite = jnp.array(True)
+            for g in jax.tree.leaves(grads):
+                finite &= jnp.all(jnp.isfinite(g.astype(jnp.float32)))
+            skip = ~finite
+            metrics["skipped"] = skip.astype(jnp.int32)
+
+        rng = jax.random.wrap_key_data(state["rng"])
+        rng, sub = jax.random.split(rng)
+        newp, new_opt, opt_metrics = adamw_update(
+            grads, state["opt"], params, opt_cfg, skip=skip,
+            rng=sub if opt_cfg.stochastic_round else None)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss / scale
+
+        new_state = {"params": newp, "opt": new_opt,
+                     "rng": jax.random.key_data(rng)}
+        if new_ls is not None:
+            new_state["lscale"] = new_ls
+        return new_state, metrics
+
+    return train_step

@@ -1,0 +1,125 @@
+"""Dry-run infrastructure tests.
+
+The production meshes need 512 fake devices, which must be configured
+before jax initializes — so mesh-dependent checks run in a subprocess.
+The HLO analyzer is validated in-process on small 1-device modules.
+"""
+import json
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import analyze
+from repro.configs import ARCHS
+from repro.configs.base import SHAPES
+from repro.launch.specs import cell_is_applicable, input_specs
+
+
+def test_analyzer_matches_xla_on_scanfree_module():
+    def g(w1, w2, x):
+        return jnp.tanh(jnp.tanh(x @ w1) @ w2).sum()
+
+    sh = lambda *s: jax.ShapeDtypeStruct(s, jnp.bfloat16)
+    co = jax.jit(g).lower(sh(256, 256), sh(256, 256), sh(128, 256)).compile()
+    ours = analyze(co.as_text())
+    xla = co.cost_analysis()
+    assert abs(ours["flops"] / xla["flops"] - 1) < 0.1
+    assert abs(ours["bytes"] / xla["bytes accessed"] - 1) < 0.25
+
+
+def test_analyzer_weighs_scan_trip_count():
+    def f(w, x):
+        def body(c, wl):
+            return jnp.tanh(c @ wl), ()
+        y, _ = jax.lax.scan(body, x, w)
+        return y.sum()
+
+    flops = {}
+    for L in (4, 8):
+        co = jax.jit(f).lower(
+            jax.ShapeDtypeStruct((L, 256, 256), jnp.bfloat16),
+            jax.ShapeDtypeStruct((64, 256), jnp.bfloat16)).compile()
+        flops[L] = analyze(co.as_text())["flops"]
+        dots = L * 2 * 64 * 256 * 256
+        assert abs(flops[L] / dots - 1) < 0.2, (L, flops[L], dots)
+    assert 1.8 < flops[8] / flops[4] < 2.2
+
+
+def test_collective_parse_weighted():
+    hlo = textwrap.dedent("""\
+    HloModule m, is_scheduled=true
+    %region_0.1 (arg: (s32[], f32[64,32])) -> (s32[], f32[64,32]) {
+      %p = (s32[], f32[64,32]{1,0}) parameter(0)
+      %g = f32[64,32]{1,0} get-tuple-element(%p), index=1
+      %ar = f32[64,32]{1,0} all-reduce(%g), replica_groups={}, to_apply=%sum.2
+      %i = s32[] get-tuple-element(%p), index=0
+      ROOT %t = (s32[], f32[64,32]{1,0}) tuple(%i, %ar)
+    }
+    %sum.2 (a: f32[], b: f32[]) -> f32[] {
+      %a = f32[] parameter(0)
+      %b = f32[] parameter(1)
+      ROOT %s = f32[] add(%a, %b)
+    }
+    ENTRY %main (x: f32[64,32]) -> f32[64,32] {
+      %x = f32[64,32]{1,0} parameter(0)
+      %c = s32[] constant(0)
+      %tup = (s32[], f32[64,32]{1,0}) tuple(%c, %x)
+      %w = (s32[], f32[64,32]{1,0}) while(%tup), condition=%cond.3, body=%region_0.1, backend_config={"known_trip_count":{"n":"5"}}
+      ROOT %o = f32[64,32]{1,0} get-tuple-element(%w), index=1
+    }
+    %cond.3 (p: (s32[], f32[64,32])) -> pred[] {
+      %p2 = (s32[], f32[64,32]{1,0}) parameter(0)
+      %i2 = s32[] get-tuple-element(%p2), index=0
+      %k = s32[] constant(5)
+      ROOT %lt = pred[] compare(%i2, %k), direction=LT
+    }
+    """)
+    res = analyze(hlo)
+    # all-reduce of 64*32*4 bytes, x2 (RS+AG), x5 trips
+    assert res["coll_bytes"]["all-reduce"] == 64 * 32 * 4 * 2 * 5
+    assert res["coll_counts"]["all-reduce"] == 5
+
+
+def test_applicability_matrix():
+    skips = []
+    for name, cfg in ARCHS.items():
+        for sname, shape in SHAPES.items():
+            ok, why = cell_is_applicable(cfg, shape)
+            if not ok:
+                skips.append((name, sname))
+                assert "full-attention" in why
+    # exactly the eight non-sub-quadratic archs skip long_500k
+    assert len(skips) == 8
+    assert all(s == "long_500k" for _, s in skips)
+    assert not any(a in ("xlstm-125m", "zamba2-7b") for a, _ in skips)
+
+
+def test_input_specs_shapes():
+    cfg = ARCHS["internvl2-76b"]
+    sp = input_specs(cfg, SHAPES["train_4k"])
+    assert sp["tokens"].shape == (256, 4096)
+    assert sp["aux"]["patches"].shape == (256, 256, 3200)
+    spd = input_specs(cfg, SHAPES["decode_32k"])
+    assert spd["tok"].shape == (128,)
+    assert spd["cache"]["kv"]["k"].shape == (80, 128, 32768, 8, 128)
+
+
+@pytest.mark.slow
+def test_dryrun_cell_subprocess(tmp_path):
+    """End-to-end: one real dry-run cell at 512 devices in a subprocess."""
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+           "whisper-tiny", "--shape", "train_4k", "--out", str(tmp_path)]
+    r = subprocess.run(cmd, capture_output=True, text=True, timeout=560,
+                       env={**__import__("os").environ,
+                            "PYTHONPATH": "src"})
+    assert r.returncode == 0, r.stderr[-2000:]
+    rec = json.load(open(tmp_path / "whisper-tiny_train_4k_pod16x16.json"))
+    assert rec["status"] == "ok"
+    assert rec["n_devices"] == 256
+    assert rec["flops_per_device"] > 0
+    assert rec["memory"]["temp_bytes"] > 0

@@ -1,0 +1,147 @@
+"""Tests for the fused ExSdotp/ExVsum/Vsum semantics (paper §III-B/C)."""
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import formats as F
+from repro.core import exsdotp as X
+
+RNG = np.random.default_rng(42)
+
+SRC_DST = [("fp8", "fp16"), ("fp8alt", "fp16"), ("fp8", "fp16alt"),
+           ("fp8alt", "fp16alt"), ("fp16", "fp32"), ("fp16alt", "fp32")]
+
+
+def _rand(fmt, n, scale=1.0):
+    return F.quantize_np(RNG.normal(0, scale, n), fmt)
+
+
+# ----------------------------------------------------------------- oracle --
+
+def test_nonassociativity_worked_example():
+    """Paper §III-B: |a| >> |c|, b = -a: (a+b)+c = c but a+(b+c) may be 0.
+
+    The fused three-term add must return c; a cascade of two adds
+    (inner first) loses it.
+    """
+    # fp16 values: a = 2048, b = -2048, c = 0.25.  b + c rounds to b in fp16.
+    a, b, c = 2048.0, -2048.0, 0.25
+    fused = X.vsum_np(a, b, c, "fp16")
+    assert fused == 0.25
+    inner = F.quantize_np(np.float64(b + c), F.FP16)   # = -2048 (c absorbed)
+    cascade = F.quantize_np(np.float64(a + inner), F.FP16)
+    assert cascade == 0.0                              # catastrophic loss
+
+
+@pytest.mark.parametrize("src,dst", SRC_DST)
+def test_exsdotp_single_rounding_matches_f64(src, dst):
+    """For well-scaled inputs the fused result == RNE_dst of the f64 value."""
+    n = 512
+    a, b, c, d = (_rand(src, n) for _ in range(4))
+    e = _rand(dst, n, 4.0)
+    ours = X.exsdotp_np(a, b, c, d, e, src, dst)
+    golden = F.quantize_np(a * b + c * d + e, dst)  # exact in f64 here
+    np.testing.assert_array_equal(ours, golden)
+
+
+def test_exsdotp_beats_cascade_on_cancellation():
+    """Construct the paper's precision-loss case: products cancel exactly."""
+    src, dst = "fp8", "fp16"
+    # a*b = 4, c*d = -4, e tiny: cascade computes 4 + RNE(-4 + e).
+    a, b, c, d = 2.0, 2.0, -2.0, 2.0
+    e = 2.0 ** -14  # small enough that (-4 + e) rounds back to -4 in fp16
+    fused = X.exsdotp_np(a, b, c, d, e, src, dst)[()]
+    casc = X.exfma_cascade_np(a, b, c, d, e, src, dst)[()]
+    assert fused == e       # exact-zero recovery keeps the accumulator
+    assert casc == 0.0      # two roundings lose it
+
+
+@pytest.mark.parametrize("src,dst", SRC_DST)
+def test_exvsum_is_exsdotp_with_ones(src, dst):
+    n = 256
+    a, c = _rand(src, n), _rand(src, n)
+    e = _rand(dst, n, 4.0)
+    np.testing.assert_array_equal(
+        X.exvsum_np(a, c, e, src, dst),
+        X.exsdotp_np(a, np.ones(n), c, np.ones(n), e, src, dst))
+
+
+def test_special_values():
+    nan = X.exsdotp_np(np.nan, 1.0, 1.0, 1.0, 1.0, "fp8")
+    assert math.isnan(nan[()])
+    inf = X.exsdotp_np(448.0, 448.0, 448.0, 448.0, 60000.0, "fp8alt", "fp16")
+    assert math.isinf(inf[()])
+    opp = X.exvsum_np(np.inf, -np.inf, 1.0, "fp16", "fp32")
+    assert math.isnan(opp[()])
+
+
+# ------------------------------------------------------ jax vs oracle ------
+
+@pytest.mark.parametrize("src,dst", SRC_DST)
+def test_jax_matches_oracle(src, dst):
+    n = 2048
+    a, b, c, d = (_rand(src, n) for _ in range(4))
+    e = _rand(dst, n, 4.0)
+    ours = np.asarray(X.exsdotp(*map(jnp.asarray, (a, b, c, d, e)), src, dst),
+                      np.float64)
+    oracle = X.exsdotp_np(a, b, c, d, e, src, dst)
+    # TwoSum compensation is exact except for ties in the correction term;
+    # demand exactness on >=99.9% and <=1 ulp everywhere.
+    exact = np.mean(ours == oracle)
+    assert exact >= 0.999, f"only {exact:.4%} bit-exact"
+    fdst = F.get_format(dst)
+    ulp = np.abs(oracle) * 2.0 ** (-fdst.man_bits) + fdst.min_subnormal
+    np.testing.assert_array_compare(lambda x, y: x <= y,
+                                    np.abs(ours - oracle), ulp)
+
+
+def test_jax_vsum_matches_oracle():
+    n = 1024
+    a, c, e = (_rand("fp16", n, 8.0) for _ in range(3))
+    ours = np.asarray(X.vsum(jnp.asarray(a), jnp.asarray(c), jnp.asarray(e), "fp16"))
+    oracle = vs = X.vsum_np(a, c, e, "fp16")
+    assert np.mean(ours == oracle) >= 0.999
+
+
+# ------------------------------------------------------- property-based ----
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(0, 2**32 - 1))
+def test_property_fused_single_rounding(seed):
+    """Invariant: fused result == correctly-rounded exact sum (any inputs)."""
+    rng = np.random.default_rng(seed)
+    src, dst = ("fp8", "fp16") if seed % 2 else ("fp16", "fp32")
+    scale = 4.0 ** rng.integers(-4, 5)
+    a, b, c, d = (F.quantize_np(rng.normal(0, scale), src) for _ in range(4))
+    e = F.quantize_np(rng.normal(0, scale * scale), dst)
+    got = X.exsdotp_np(a, b, c, d, e, src, dst)[()]
+    # golden: exact dyadic sum rounded once (recomputed independently)
+    exact = X._exact_3sum_round((float(a) * float(b), float(c) * float(d),
+                                 float(e)), F.get_format(dst))
+    assert got == exact or (math.isnan(got) and math.isnan(exact))
+
+
+@pytest.mark.parametrize("src", ["fp8", "fp8alt"])
+def test_fused_beats_cascade_in_aggregate(src):
+    """Paper Table IV: ExSdotp chains are *consistently* (in aggregate) more
+    accurate than ExFMA chains. Per-draw either may win (error cancellation),
+    so compare mean |relative error| over many chains.
+    """
+    rng = np.random.default_rng(7)
+    errs_f, errs_c = [], []
+    for _ in range(60):
+        a = F.quantize_np(rng.normal(0, 1, 128), src)
+        b = F.quantize_np(rng.normal(0, 1, 128), src)
+        exact = float(np.dot(a, b))
+        # normalize by the accumulation scale, not the (possibly cancelled)
+        # exact value, so single ill-conditioned draws don't dominate
+        denom = float(np.sum(np.abs(a * b))) + 1e-9
+        fused = X.exsdotp_chain_np(a, b, src)
+        casc = X.exfma_chain_np(a, b, src)
+        errs_f.append(abs(fused - exact) / denom)
+        errs_c.append(abs(casc - exact) / denom)
+    assert np.mean(errs_f) <= np.mean(errs_c) * 1.001
+    assert np.median(errs_f) <= np.median(errs_c) * 1.001

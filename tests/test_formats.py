@@ -1,0 +1,91 @@
+"""Bit-exactness tests for the MiniFloat-NN format layer (paper §III-A)."""
+import jax
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+import pytest
+
+from repro.core import formats as F
+
+RNG = np.random.default_rng(0)
+
+CASES = [
+    (F.FP8, ml_dtypes.float8_e5m2),
+    (F.FP8ALT, ml_dtypes.float8_e4m3),
+    (F.FP16, np.float16),
+    (F.FP16ALT, ml_dtypes.bfloat16),
+]
+
+
+def _interesting_values(fmt):
+    """Sweep: normals, subnormals, halfway points, overflow, specials."""
+    vals = [0.0, -0.0, fmt.min_subnormal, fmt.min_subnormal / 2,
+            fmt.min_subnormal * 1.5, fmt.min_normal, fmt.max_normal,
+            fmt.max_normal * (1 + 2.0 ** (-fmt.man_bits - 1)),  # exactly half ulp over
+            fmt.max_normal * 1.5, np.inf, -np.inf]
+    vals += list(RNG.normal(0, 2.0, 512))
+    vals += list(RNG.normal(0, 2.0, 256) * fmt.max_normal)
+    vals += list(RNG.normal(0, 4.0, 256) * fmt.min_normal)
+    out = np.array(vals, np.float32)
+    return np.concatenate([out, -out])
+
+
+@pytest.mark.parametrize("fmt,mld", CASES, ids=[c[0].name for c in CASES])
+def test_quantize_matches_native_cast(fmt, mld):
+    x = _interesting_values(fmt)
+    ours = np.asarray(F.quantize(jnp.asarray(x), fmt))
+    ref = x.astype(mld).astype(np.float32)
+    np.testing.assert_array_equal(ours, ref)
+
+
+@pytest.mark.parametrize("fmt,mld", CASES, ids=[c[0].name for c in CASES])
+def test_quantize_np_matches_native_cast(fmt, mld):
+    x = _interesting_values(fmt)
+    ours = F.quantize_np(x, fmt).astype(np.float32)
+    ref = x.astype(mld).astype(np.float32)
+    np.testing.assert_array_equal(ours, ref)
+
+
+@pytest.mark.parametrize("fmt,mld", CASES, ids=[c[0].name for c in CASES])
+def test_encode_decode_roundtrip(fmt, mld):
+    x = _interesting_values(fmt)
+    q = F.quantize_np(x, fmt)
+    bits = F.encode_np(x, fmt)
+    back = F.decode_np(bits, fmt)
+    finite = np.isfinite(q)
+    np.testing.assert_array_equal(back[finite], q[finite])
+    np.testing.assert_array_equal(np.isinf(back), np.isinf(q))
+    np.testing.assert_array_equal(np.isnan(back), np.isnan(q))
+
+
+def test_nan_propagation():
+    for fmt in (F.FP8, F.FP8ALT, F.FP16, F.FP16ALT):
+        out = np.asarray(F.quantize(jnp.asarray([np.nan, 1.0]), fmt))
+        assert np.isnan(out[0]) and not np.isnan(out[1])
+
+
+def test_quantize_idempotent():
+    for fmt in (F.FP8, F.FP8ALT, F.FP16, F.FP16ALT):
+        x = RNG.normal(0, 10, 4096).astype(np.float32)
+        q1 = np.asarray(F.quantize(jnp.asarray(x), fmt))
+        q2 = np.asarray(F.quantize(jnp.asarray(q1), fmt))
+        np.testing.assert_array_equal(q1, q2)
+
+
+def test_format_constants_match_paper():
+    # paper Fig. 1 widths
+    assert (F.FP8.exp_bits, F.FP8.man_bits) == (5, 2)
+    assert (F.FP8ALT.exp_bits, F.FP8ALT.man_bits) == (4, 3)
+    assert (F.FP16.exp_bits, F.FP16.man_bits) == (5, 10)
+    assert (F.FP16ALT.exp_bits, F.FP16ALT.man_bits) == (8, 7)
+    # FP8 shares FP16's dynamic range (paper §II-A)
+    assert F.FP8.max_exp == F.FP16.max_exp == 15
+    # expanding pairs (Table I)
+    assert F.EXPANDING_DST["fp8"] is F.FP16
+    assert F.EXPANDING_DST["fp16"] is F.FP32
+
+
+def test_saturating_variant():
+    fmt = F.MiniFloatFormat("fp8sat", 5, 2, inf_behavior="saturate")
+    out = np.asarray(F.quantize(jnp.asarray([1e9, -1e9]), fmt))
+    np.testing.assert_array_equal(out, [fmt.max_normal, -fmt.max_normal])

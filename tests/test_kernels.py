@@ -1,0 +1,150 @@
+"""Pallas kernel validation: interpret-mode vs pure-jnp oracles.
+
+Per instructions: sweep shapes/dtypes and assert_allclose against ref.py.
+Bit-exactness is asserted on integer-valued inputs (fp32 accumulation is
+then exact in both implementations regardless of summation order).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(3)
+
+SRC_DTYPES = [jnp.float8_e5m2, jnp.float8_e4m3, jnp.float16, jnp.bfloat16]
+SHAPES = [(8, 16, 8), (128, 128, 128), (64, 256, 32), (100, 130, 50),
+          (1, 512, 1), (256, 64, 512)]
+
+
+@pytest.mark.parametrize("src", SRC_DTYPES, ids=lambda d: d.__name__)
+@pytest.mark.parametrize("shape", SHAPES, ids=str)
+def test_gemm_matches_ref(src, shape):
+    m, k, n = shape
+    a = jnp.asarray(RNG.normal(0, 1, (m, k)), src)
+    b = jnp.asarray(RNG.normal(0, 1, (k, n)), src)
+    out = ops.exsdotp_gemm(a, b, 0.5, out_dtype=jnp.float32,
+                           impl="pallas_interpret", blocks=(8, 8, 16))
+    want = ref.exsdotp_gemm_ref(a, b, 0.5, out_dtype=jnp.float32)
+    # fp32 accumulation order differs (tiled partial sums vs full-K dot):
+    # worst-case relative drift ~ K * 2^-24.
+    tol = max(k * 2.0 ** -24, 1e-6)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=tol, atol=tol * np.sqrt(k))
+
+
+@pytest.mark.parametrize("src", SRC_DTYPES, ids=lambda d: d.__name__)
+@pytest.mark.parametrize("out_dtype", [jnp.float16, jnp.bfloat16, jnp.float32],
+                         ids=lambda d: d.__name__)
+def test_gemm_bit_exact_on_integer_inputs(src, out_dtype):
+    """Integer-valued operands make fp32 accumulation exact -> bit equality,
+    including the single final downcast (the ExSdotp rounding step)."""
+    m, k, n = 48, 96, 32
+    a = jnp.asarray(RNG.integers(-4, 5, (m, k)), src)
+    b = jnp.asarray(RNG.integers(-4, 5, (k, n)), src)
+    out = ops.exsdotp_gemm(a, b, 1.0, out_dtype=out_dtype,
+                           impl="pallas_interpret", blocks=(16, 16, 32))
+    want = ref.exsdotp_gemm_ref(a, b, 1.0, out_dtype=out_dtype)
+    np.testing.assert_array_equal(np.asarray(out, np.float32),
+                                  np.asarray(want, np.float32))
+
+
+def test_gemm_expanding_accumulation_beats_dst_accumulation():
+    """The point of the unit (paper Fig. 9): wide accumulation wins.
+
+    Accumulating fp8 products in fp16 (non-expanding chain) drifts; the
+    kernel's fp32 VMEM accumulator with one final rounding stays within
+    1 fp16 ulp of the exact result.
+    """
+    k = 4096
+    a = jnp.asarray(RNG.normal(0, 1, (1, k)), jnp.float8_e4m3)
+    b = jnp.asarray(RNG.normal(0, 1, (k, 1)), jnp.float8_e4m3)
+    out = ops.exsdotp_gemm(a, b, 1.0, out_dtype=jnp.float16,
+                           impl="pallas_interpret", blocks=(1, 1, 64))
+    exact = (np.asarray(a, np.float64) @ np.asarray(b, np.float64)).item()
+    # naive fp16 running accumulation
+    acc = np.float16(0)
+    af = np.asarray(a, np.float32)[0]
+    bf = np.asarray(b, np.float32)[:, 0]
+    for i in range(k):
+        acc = np.float16(acc + np.float16(af[i] * bf[i]))
+    ulp = abs(exact) * 2.0 ** -10
+    assert abs(float(np.asarray(out, np.float32)[0, 0]) - exact) <= ulp
+    assert abs(float(acc) - exact) > ulp  # the naive chain actually drifts
+
+
+@pytest.mark.parametrize("q_dtype", [jnp.float8_e5m2, jnp.float8_e4m3],
+                         ids=lambda d: d.__name__)
+@pytest.mark.parametrize("shape", [(128, 128), (256, 384), (100, 70)], ids=str)
+def test_quant_blockwise_matches_ref(q_dtype, shape):
+    x = jnp.asarray(RNG.normal(0, 5, shape), jnp.float32)
+    q, s = ops.quantize_blockwise(x, q_dtype, block_m=32, block_n=32,
+                                  impl="pallas_interpret")
+    qr, sr = ops.quantize_blockwise(x, q_dtype, block_m=32, block_n=32,
+                                    impl="xla")
+    np.testing.assert_array_equal(np.asarray(q, np.float32),
+                                  np.asarray(qr, np.float32))
+    # scale may differ by 1 f32 ulp (XLA may fuse /s as *rcp(s))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=3e-7)
+
+
+def test_quant_roundtrip_error_bound():
+    """|x - dequant(quant(x))| <= 2^-m * blockmax for every block."""
+    x = jnp.asarray(RNG.normal(0, 3, (256, 256)), jnp.float32)
+    for q_dtype, man in [(jnp.float8_e5m2, 2), (jnp.float8_e4m3, 3)]:
+        q, s = ops.quantize_blockwise(x, q_dtype, block_m=64, block_n=64,
+                                      impl="pallas_interpret")
+        back = ops.dequantize_blockwise(q, s, block_m=64, block_n=64)
+        err = np.abs(np.asarray(back) - np.asarray(x))
+        bmax = np.abs(np.asarray(x)).reshape(4, 64, 4, 64).max((1, 3))
+        bound = np.repeat(np.repeat(bmax, 64, 0), 64, 1) * 2.0 ** (-man) * 1.01
+        assert (err <= bound).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 5), st.integers(1, 5), st.integers(1, 5),
+       st.integers(0, 2**31 - 1))
+def test_property_gemm_any_shape(mb, kb, nb, seed):
+    """Property: kernel == oracle for random block-multiple shapes."""
+    rng = np.random.default_rng(seed)
+    m, k, n = 8 * mb, 16 * kb, 8 * nb
+    a = jnp.asarray(rng.integers(-3, 4, (m, k)), jnp.float8_e4m3)
+    b = jnp.asarray(rng.integers(-3, 4, (k, n)), jnp.float8_e5m2)
+    out = ops.exsdotp_gemm(a, b, 1.0, out_dtype=jnp.float32,
+                           impl="pallas_interpret", blocks=(8, 8, 16))
+    want = ref.exsdotp_gemm_ref(a, b, 1.0, out_dtype=jnp.float32)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+# ------------------------------------------------------ flash attention ---
+
+@pytest.mark.parametrize("causal", [True, False], ids=["causal", "full"])
+@pytest.mark.parametrize("shape", [(2, 64, 16), (4, 128, 32), (1, 256, 64)],
+                         ids=str)
+def test_flash_attention_matches_ref(causal, shape):
+    from repro.kernels.flash_attention import flash_attention_pallas
+    bh, s, hd = shape
+    q = jnp.asarray(RNG.normal(0, 1, (bh, s, hd)), jnp.bfloat16)
+    k = jnp.asarray(RNG.normal(0, 1, (bh, s, hd)), jnp.bfloat16)
+    v = jnp.asarray(RNG.normal(0, 1, (bh, s, hd)), jnp.bfloat16)
+    out = flash_attention_pallas(q, k, v, causal=causal, block_q=32,
+                                 block_k=32, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_flash_attention_cross_lengths():
+    """S != T (cross attention / cached decode windows)."""
+    from repro.kernels.flash_attention import flash_attention_pallas
+    q = jnp.asarray(RNG.normal(0, 1, (2, 32, 16)), jnp.float32)
+    k = jnp.asarray(RNG.normal(0, 1, (2, 128, 16)), jnp.float32)
+    v = jnp.asarray(RNG.normal(0, 1, (2, 128, 16)), jnp.float32)
+    out = flash_attention_pallas(q, k, v, causal=False, block_q=32,
+                                 block_k=32, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)

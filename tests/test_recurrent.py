@@ -1,0 +1,102 @@
+"""Recurrent-engine correctness: the chunked GLA scan (shared by Mamba2/SSD
+and mLSTM) against the naive step-by-step recurrence, plus decode-vs-prefill
+consistency for the recurrent model families (the dense-family version of
+this test lives in test_arch_smoke.py).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ARCHS
+from repro.models import build_model
+from repro.models.ssm import chunked_gla, gla_step
+
+RNG = np.random.default_rng(11)
+
+
+def _naive_gla(q, k, v, log_a):
+    """Step-by-step reference: H_t = a_t H_{t-1} + k_t v_t^T; y_t = q_t H_t."""
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    hst = np.zeros((b, h, dk, dv), np.float64)
+    ys = np.zeros((b, s, h, dv), np.float64)
+    qf, kf, vf = (np.asarray(t, np.float64) for t in (q, k, v))
+    af = np.exp(np.asarray(log_a, np.float64))
+    for t in range(s):
+        hst = af[:, t][..., None, None] * hst + np.einsum(
+            "bhd,bhv->bhdv", kf[:, t], vf[:, t])
+        ys[:, t] = np.einsum("bhd,bhdv->bhv", qf[:, t], hst)
+    return ys, hst
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 32])
+def test_chunked_gla_matches_naive_recurrence(chunk):
+    b, s, h, dk, dv = 2, 32, 3, 5, 7
+    q = jnp.asarray(RNG.normal(0, 1, (b, s, h, dk)), jnp.float32)
+    k = jnp.asarray(RNG.normal(0, 1, (b, s, h, dk)), jnp.float32)
+    v = jnp.asarray(RNG.normal(0, 1, (b, s, h, dv)), jnp.float32)
+    la = jnp.asarray(-np.abs(RNG.normal(0, 0.5, (b, s, h))), jnp.float32)
+    y, hT = chunked_gla(q, k, v, la, chunk=chunk)
+    y_ref, h_ref = _naive_gla(q, k, v, la)
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(hT), h_ref, rtol=2e-4, atol=2e-4)
+
+
+def test_gla_step_continues_chunked_state():
+    """prefill (chunked) then decode (gla_step) == one long chunked run."""
+    b, s, h, dk, dv = 1, 16, 2, 4, 4
+    q = jnp.asarray(RNG.normal(0, 1, (b, s + 1, h, dk)), jnp.float32)
+    k = jnp.asarray(RNG.normal(0, 1, (b, s + 1, h, dk)), jnp.float32)
+    v = jnp.asarray(RNG.normal(0, 1, (b, s + 1, h, dv)), jnp.float32)
+    la = jnp.asarray(-np.abs(RNG.normal(0, 0.3, (b, s + 1, h))), jnp.float32)
+    y_full, h_full = chunked_gla(q, k, v, la, chunk=4)
+    y_pre, h_pre = chunked_gla(q[:, :s], k[:, :s], v[:, :s], la[:, :s],
+                               chunk=4)
+    y_dec, h_dec = gla_step(q[:, s], k[:, s], v[:, s], la[:, s], h_pre)
+    np.testing.assert_allclose(np.asarray(y_dec),
+                               np.asarray(y_full[:, s]), rtol=1e-4,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h_dec), np.asarray(h_full),
+                               rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([2, 4, 8]))
+def test_property_gla_chunk_invariance(seed, chunk):
+    """Invariant: the chunk size never changes the result."""
+    rng = np.random.default_rng(seed)
+    b, s, h, dk, dv = 1, 16, 2, 3, 3
+    q = jnp.asarray(rng.normal(0, 1, (b, s, h, dk)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (b, s, h, dk)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (b, s, h, dv)), jnp.float32)
+    la = jnp.asarray(-np.abs(rng.normal(0, 0.5, (b, s, h))), jnp.float32)
+    y1, h1 = chunked_gla(q, k, v, la, chunk=chunk)
+    y2, h2 = chunked_gla(q, k, v, la, chunk=s)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=5e-4,
+                               atol=5e-4)
+
+
+@pytest.mark.parametrize("arch", ["zamba2-7b", "xlstm-125m"])
+def test_recurrent_decode_matches_prefill(arch):
+    """Token-by-token decode (state caches) == teacher-forced forward."""
+    cfg = dataclasses.replace(ARCHS[arch].reduced(), policy_name="bf16")
+    model = build_model(cfg)
+    rng = np.random.default_rng(5)
+    params = model.init(jax.random.key(5))
+    batch, seq = 2, 8
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (batch, seq)))
+    full_logits, _ = jax.jit(lambda p, t: model.apply(p, t))(params, tokens)
+    cache = model.init_cache(batch, seq)
+    step = jax.jit(lambda p, t, c: model.decode_step(p, t, c))
+    outs = []
+    for i in range(seq):
+        lg, cache = step(params, tokens[:, i], cache)
+        outs.append(lg)
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec, np.float32),
+                               np.asarray(full_logits, np.float32),
+                               rtol=4e-2, atol=4e-2)
