@@ -16,6 +16,11 @@ ExSdotp (paper Fig. 4):   2 multipliers (p_src), one 3-term sorted adder
 
 Also reported: VMEM working set per kernel tile configuration — the TPU
 "scratchpad area" the Pallas ExSdotp GEMM claims (kernels/exsdotp_gemm.py).
+
+Reproduces: paper Fig. 7a (resource/area comparison, as bit-level proxies).
+
+Run:
+    PYTHONPATH=src python -m benchmarks.fig7_resources
 """
 from __future__ import annotations
 

@@ -21,6 +21,12 @@ Reported per cell:
       remat/redundant compute,
     * roofline fraction = (MODEL_FLOPS/chips/peak) / max(term) — the score:
       fraction of peak the step achieves *if* it runs at the roofline bound.
+
+Not a paper table — this is the repo's own TPU-scaling instrument (the
+paper's cluster analysis, §IV-B, re-aimed at the v5e mesh).
+
+Run (after generating dry-run artifacts with repro.launch.dryrun):
+    PYTHONPATH=src python -m benchmarks.roofline [--dir dryrun_out]
 """
 from __future__ import annotations
 

@@ -2,6 +2,11 @@
 table from the dry-run artifacts. Prints ``name,us_per_call,derived`` CSV
 for timed sections and structured CSV for modeled/accuracy sections.
 
+Covers: Table II / Fig. 8 (table2_gemm), Table IV (table4_accuracy),
+Fig. 7a (fig7_resources), plus the beyond-paper block-scaling sweep
+(blockscale_gemm) and the roofline instrument (roofline).
+
+Run:
     PYTHONPATH=src python -m benchmarks.run [--quick]
 """
 from __future__ import annotations
@@ -84,6 +89,11 @@ def main() -> None:
     fig7_resources.main()
     print("=" * 72)
     bench_kernels(quick)
+    print("=" * 72)
+    print("## Block-scaled vs per-tensor GEMM (beyond-paper; outlier sweep)")
+    from benchmarks import blockscale_gemm
+    blockscale_gemm.accuracy_sweep(quick)
+    blockscale_gemm.throughput(quick)
     print("=" * 72)
     print("## Roofline (from dry-run artifacts, if present)")
     import os

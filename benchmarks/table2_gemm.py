@@ -21,6 +21,11 @@ all kernels, then compared against every cycle count in Table II — the
 derived quantities the paper highlights (1.96x FP8 vs FP16 FLOP/cycle at
 128x256/128x128, 7.23x vs FP64, 2x peak vs ExFMA) are recomputed from the
 model and from the paper's own numbers.
+
+Reproduces: paper Table II and Fig. 8 (GEMM cycles / FLOP-per-cycle).
+
+Run:
+    PYTHONPATH=src python -m benchmarks.table2_gemm
 """
 from __future__ import annotations
 

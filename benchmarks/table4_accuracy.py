@@ -9,6 +9,11 @@ Gaussian inputs quantized to the source precision, using
 Reported: relative error vs the FP64 golden. The paper's claim to verify:
 ExSdotp error <= ExFMA error for both FP16->FP32 and FP8->FP16, with the
 gap growing at smaller bitwidths.
+
+Reproduces: paper Table IV (chain-accumulation accuracy).
+
+Run:
+    PYTHONPATH=src python -m benchmarks.table4_accuracy
 """
 from __future__ import annotations
 

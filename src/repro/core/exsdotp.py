@@ -39,7 +39,7 @@ from .formats import MiniFloatFormat, get_format, quantize, quantize_np, EXPANDI
 
 __all__ = [
     "exsdotp_np", "exvsum_np", "vsum_np", "exfma_np", "exfma_cascade_np",
-    "exsdotp_chain_np", "exfma_chain_np",
+    "exsdotp_chain_np", "exfma_chain_np", "exsdotp_gemm_np",
     "exsdotp", "vsum", "two_sum",
 ]
 
@@ -106,16 +106,62 @@ def _as_flat_f64(*arrays):
     return [np.broadcast_to(a, shape).ravel() for a in arrs], shape
 
 
+def _two_sum_np(x, y):
+    """Vectorized Knuth TwoSum: x + y == s + err, exactly (f64)."""
+    s = x + y
+    bv = s - x
+    err = (x - (s - bv)) + (y - bv)
+    return s, err
+
+
+def _fused_3sum_rne_np(t1, t2, t3, fmt: MiniFloatFormat):
+    """Vectorized correctly-rounded three-term sum of exact f64 terms.
+
+    TwoSum cascade collapses t1+t2+t3 into w + e4 + e3 (exactly); the
+    53-bit intermediate is then nudged to *round-to-odd* toward the
+    residual, after which a single RNE into ``fmt`` is the correctly
+    rounded result of the exact sum — valid whenever
+    ``fmt.precision + 2 <= 53`` (every format here; fp32 dst = 26).
+
+    Returns ``(out, fallback_mask)``; masked lanes (non-finite terms, or
+    the total-cancellation corner where w == 0 with residual left) must
+    be recomputed with the scalar dyadic-bignum path.
+    """
+    with np.errstate(all="ignore"):
+        s, e1 = _two_sum_np(t1, t2)
+        v, e2 = _two_sum_np(s, t3)      # x = v + e1 + e2, exactly
+        r, e3 = _two_sum_np(e1, e2)     # x = v + r  + e3, exactly
+        w, e4 = _two_sum_np(v, r)       # x = w + e4 + e3, exactly
+        rho = e4 + e3                   # sign-exact residual (Hauser)
+        bits = np.ascontiguousarray(w).view(np.uint64).reshape(w.shape)
+        need_odd = (rho != 0) & ((bits & np.uint64(1)) == 0)
+        w_odd = np.where(
+            need_odd,
+            np.nextafter(w, np.where(rho > 0, np.inf, -np.inf)), w)
+        out = quantize_np(w_odd, fmt)
+    fallback = (~np.isfinite(t1) | ~np.isfinite(t2) | ~np.isfinite(t3)
+                | ((w == 0) & (rho != 0)))
+    return out, fallback
+
+
 def exsdotp_np(a, b, c, d, e, src_fmt, dst_fmt=None) -> np.ndarray:
-    """Oracle: fused r = RNE_dst(a*b + c*d + e), inputs quantized to formats."""
+    """Oracle: fused r = RNE_dst(a*b + c*d + e), inputs quantized to formats.
+
+    Vectorized (TwoSum expansion + round-to-odd; see
+    ``_fused_3sum_rne_np``) with a per-element fallback to the exact
+    dyadic-bignum path on special values — fast enough to drive
+    GEMM-sized accuracy tests (DESIGN.md §6).
+    """
     src = get_format(src_fmt)
     dst = get_format(dst_fmt) if dst_fmt is not None else EXPANDING_DST[src.name]
     a, b, c, d = (quantize_np(x, src) for x in (a, b, c, d))
     (a, b, c, d, e), shape = _as_flat_f64(a, b, c, d, quantize_np(e, dst))
-    out = np.empty(a.shape, np.float64)
-    for i in range(a.size):
+    with np.errstate(all="ignore"):
         # products of src-format values are exact in float64 (2*p_src <= 53)
-        out[i] = _exact_3sum_round((a[i] * b[i], c[i] * d[i], e[i]), dst)
+        p1, p2 = a * b, c * d
+    out, fallback = _fused_3sum_rne_np(p1, p2, e, dst)
+    for i in np.nonzero(fallback)[0]:
+        out[i] = _exact_3sum_round((p1[i], p2[i], e[i]), dst)
     return out.reshape(shape)
 
 
@@ -175,6 +221,36 @@ def exsdotp_chain_np(prods_a, prods_b, src_fmt, dst_fmt=None, init=0.0) -> np.nd
     if n % 2:
         acc = exfma_np(a[-1], b[-1], acc, src_fmt, dst_fmt)[()]
     return np.float64(acc)
+
+
+def exsdotp_gemm_np(a, b, src_fmt, acc_fmt="fp32", init=None) -> np.ndarray:
+    """GEMM as a *vectorized* ExSdotp chain over K — the kernel's numerics.
+
+    ``a[M, K]`` and ``b[K, N]`` are quantized into ``src_fmt``; the
+    accumulator chains ExSdotp over consecutive K pairs with dst =
+    ``acc_fmt`` (the Pallas kernel's fp32 VMEM accumulator), a trailing
+    ExFMA handling odd K.  All (M, N) lanes advance together through the
+    vectorized oracle, so a 128x128x128 GEMM checks in seconds rather
+    than hours (DESIGN.md §6).  Returns the f64-held accumulator values
+    (each exactly representable in ``acc_fmt``) — callers apply their
+    own dequant scale + final rounding.
+    """
+    src = get_format(src_fmt)
+    acc_f = get_format(acc_fmt)
+    a = quantize_np(np.asarray(a, np.float64), src)
+    b = quantize_np(np.asarray(b, np.float64), src)
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    acc = np.zeros((m, n)) if init is None else \
+        np.broadcast_to(np.asarray(init, np.float64), (m, n)).copy()
+    for t in range(0, k - 1, 2):
+        acc = exsdotp_np(a[:, t, None], b[None, t, :],
+                         a[:, t + 1, None], b[None, t + 1, :],
+                         acc, src, acc_f)
+    if k % 2:
+        acc = exfma_np(a[:, -1, None], b[None, -1, :], acc, src, acc_f)
+    return acc
 
 
 def exfma_chain_np(prods_a, prods_b, src_fmt, dst_fmt=None, init=0.0) -> np.ndarray:

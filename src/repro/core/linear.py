@@ -39,6 +39,20 @@ def _qlinear_nd_fwd(x, w, policy: Policy, impl: str):
     """x [..., K] @ w [K, N] — native rank: no reshape, so sharded leading
     dims (batch/sequence-parallel) survive into the GEMM instead of being
     all-gathered by a flatten (§Perf iteration D1)."""
+    cfg = policy.block_cfg
+    if cfg is not None:
+        # fused block-scaled path (DESIGN.md §3): per-(row-tile × K-tile)
+        # scales, cast in VMEM inside the GEMM — no separate quantize pass
+        # over HBM, and no quantized residuals (bwd re-quantizes fused too).
+        # Row tiles are defined on the flattened token axis, so this path
+        # does flatten leading dims (unlike the per-tensor xla branch, D1)
+        # — scale granularity must be identical across impls; sharded-dim
+        # survival for block scaling is an open ROADMAP item.
+        lead = x.shape[:-1]
+        y = ops.blockscale_gemm(
+            x.reshape(-1, x.shape[-1]), w, q_dtype_a=policy.fwd_dtype,
+            cfg=cfg, out_dtype=policy.compute_dtype, impl=impl)
+        return y.reshape(*lead, w.shape[-1]), (x, w)
     xq, sx = ops.quantize_tensor(x, policy.fwd_dtype)
     wq, sw = ops.quantize_tensor(w, policy.fwd_dtype)
     if resolve_impl(impl) == "xla":
@@ -53,6 +67,21 @@ def _qlinear_nd_fwd(x, w, policy: Policy, impl: str):
 
 
 def _qlinear_nd_bwd(policy: Policy, impl: str, res, g):
+    cfg = policy.block_cfg
+    if cfg is not None:
+        x, w = res
+        cd = policy.compute_dtype
+        g2 = g.reshape(-1, g.shape[-1])
+        x2 = x.reshape(-1, x.shape[-1])
+        # dgrad: E5M2 grads × E4M3 weights; wgrad: E4M3 acts × E5M2 grads
+        # — both block-scaled at the same granularity as the forward.
+        dx = ops.blockscale_gemm(
+            g2, w.T, q_dtype_a=policy.bwd_dtype, q_dtype_b=policy.fwd_dtype,
+            cfg=cfg, out_dtype=cd, impl=impl).reshape(x.shape)
+        dw = ops.blockscale_gemm(
+            x2.T, g2, q_dtype_a=policy.fwd_dtype, q_dtype_b=policy.bwd_dtype,
+            cfg=cfg, out_dtype=cd, impl=impl)
+        return dx, dw
     xq, sx, wq, sw = res
     cd = policy.compute_dtype  # x and w were cast to this before the vjp
     gq, sg = ops.quantize_tensor(g, policy.bwd_dtype)

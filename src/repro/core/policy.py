@@ -39,6 +39,16 @@ class Policy:
     def quantized(self) -> bool:
         return self.fwd_dtype is not None
 
+    @property
+    def block_cfg(self):
+        """``BlockScaleConfig`` for this policy, or None for per-tensor.
+
+        With a config, every QLinear GEMM runs the fused block-scaled
+        path (quantize-in-kernel, per-block dequant — DESIGN.md §3).
+        """
+        from .scaling import BlockScaleConfig
+        return BlockScaleConfig.from_policy(self)
+
 
 # The paper's training recipe: E4M3 forward (more precision), E5M2 backward
 # (more range — gradients are long-tailed), fp32 accumulate, bf16 carrier.

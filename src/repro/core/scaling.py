@@ -1,16 +1,107 @@
-"""Dynamic loss scaling — required hygiene for narrow-range gradient
-formats (fp16 / FP8-E5M2 per-tensor-scaled).
+"""Scaling machinery for narrow formats (DESIGN.md §3).
 
-Classic scheme: multiply the loss by ``scale``; unscale gradients; if any
-gradient is non-finite, skip the update and halve the scale; after
-``growth_interval`` clean steps, double it (capped).
+Two independent mechanisms live here:
+
+* **dynamic loss scaling** — required hygiene for narrow-range gradient
+  formats (fp16 / FP8-E5M2 per-tensor-scaled).  Classic scheme: multiply
+  the loss by ``scale``; unscale gradients; if any gradient is
+  non-finite, skip the update and halve the scale; after
+  ``growth_interval`` clean steps, double it (capped).
+
+* **per-block quantization scales** — one dequant factor per
+  (row-tile × K-tile) of a GEMM operand, instead of one per tensor.
+  Flexpoint-style shared exponents and Graphcore's block formats both
+  show this is what makes 8-bit training robust to outliers: the scale
+  tracks the local amax, so a single huge activation no longer flushes
+  the rest of the tensor into the subnormal mud.  ``BlockScaleConfig``
+  is the knob threaded through policy → linear → kernels; scales default
+  to powers of two (MX-style), which makes the quantize/dequant rescale
+  *exact* — quantization error then comes only from the mantissa
+  rounding, never from the scaling itself.
 """
 from __future__ import annotations
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
 
-__all__ = ["loss_scale_init", "check_and_update_scale"]
+__all__ = ["loss_scale_init", "check_and_update_scale",
+           "BlockScaleConfig", "compute_block_scales"]
+
+
+# ---------------------------------------------------------------------------
+# Per-block quantization scales (DESIGN.md §3)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BlockScaleConfig:
+    """Granularity + rounding of per-block dequantization scales.
+
+    A GEMM operand ``A[M, K]`` gets one f32 scale per
+    ``(block_m, block_k)`` tile (``B[K, N]`` per ``(block_k, block_n)``),
+    so the fused kernel can dequantize each partial product at
+    accumulator granularity: the fp32 accumulator stays wide across the
+    whole K loop and is rounded once — eq. 1's structure, per block.
+    """
+
+    #: row-tile of the left operand / output rows
+    block_m: int = 128
+    #: column-tile of the right operand / output columns
+    block_n: int = 128
+    #: K-tile shared by both operands (scale granularity on the
+    #: contraction axis == the kernel's accumulation granularity)
+    block_k: int = 128
+    #: headroom: quantized amax lands at ``margin * max_normal``
+    margin: float = 1.0
+    #: round scales up to powers of two (MX-style shared exponents);
+    #: pow2 rescaling is exact, so dequant introduces no extra rounding
+    pow2: bool = True
+
+    @classmethod
+    def from_policy(cls, policy) -> "BlockScaleConfig | None":
+        """The config a ``Policy`` asks for (None = per-tensor scaling)."""
+        n = int(getattr(policy, "block_scale", 0) or 0)
+        if n <= 0:
+            return None
+        return cls(block_m=n, block_n=n, block_k=n)
+
+
+def _pow2_ceil(x: jax.Array) -> jax.Array:
+    """Smallest power of two >= x, exact, for normal-range f32 x > 0.
+
+    Built from exponent bits (``jnp.exp2`` is approximate on CPU XLA).
+    """
+    bits = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+    exp = ((bits >> 23) & jnp.uint32(0xFF)).astype(jnp.int32)   # biased
+    man = bits & jnp.uint32(0x7FFFFF)
+    # 2**(e+1) unless x is already an exact power of two
+    exp = jnp.where(man == 0, exp, exp + 1)
+    pow2 = jax.lax.bitcast_convert_type(
+        (jnp.clip(exp, 1, 254).astype(jnp.uint32) << 23), jnp.float32)
+    return pow2
+
+
+def compute_block_scales(x: jax.Array, block_r: int, block_c: int,
+                         q_dtype, *, margin: float = 1.0,
+                         pow2: bool = True) -> jax.Array:
+    """Per-(block_r × block_c)-tile dequant scales for ``x[R, C]``.
+
+    Returns ``s[R//block_r, C//block_c]`` (f32) such that ``x / s``
+    (broadcast per tile) fills ``q_dtype``'s range: quantized ≈ x / s,
+    dequantized = quantized * s.  All-zero tiles get scale 1.  Shapes
+    must already be padded to tile multiples (``kernels.ops`` pads).
+    """
+    r, c = x.shape
+    assert r % block_r == 0 and c % block_c == 0, ((r, c), (block_r, block_c))
+    xb = jnp.abs(x.astype(jnp.float32)).reshape(
+        r // block_r, block_r, c // block_c, block_c)
+    amax = jnp.max(xb, axis=(1, 3))
+    max_normal = jnp.float32(jnp.finfo(q_dtype).max)
+    s = amax / (max_normal * jnp.float32(margin))
+    if pow2:
+        s = _pow2_ceil(jnp.maximum(s, jnp.float32(2.0 ** -126)))
+    return jnp.where(amax > 0, s, jnp.float32(1.0))
 
 
 def loss_scale_init(initial: float = 2.0 ** 15):

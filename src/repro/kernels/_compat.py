@@ -1,0 +1,14 @@
+"""Version shims for the Pallas TPU API surface.
+
+The kernels target the current Pallas API; older jax releases spell some
+names differently.  Centralizing the aliases here keeps every kernel file
+on the modern spelling.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["CompilerParams"]
+
+# jax < 0.5 calls it TPUCompilerParams; the kwargs are compatible.
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams

@@ -1,0 +1,113 @@
+"""Fused block-scaled ExSdotp GEMM — Pallas TPU kernel (DESIGN.md §3).
+
+The per-tensor pipeline costs an extra HBM round-trip: quantize writes
+``q`` (and re-reads ``x``), then the GEMM reads ``q`` again.  Here the
+cast happens *inside* the GEMM kernel: high-precision (fp32/bf16) tiles
+stream HBM→VMEM once, are divided by their per-block scale and cast to
+the minifloat format in VMEM, multiplied on the MXU, and the partial
+product is rescaled by ``sa * sb`` into the fp32 accumulator.  The
+quantized tensor never exists in HBM.
+
+Scales are precomputed per (row-tile × K-tile) by
+``core.scaling.compute_block_scales`` — a tiny reduce, grid-mapped into
+SMEM so each (i, j, k) step reads exactly the two scalars it needs.
+Because the rescale is applied at *accumulator granularity* (once per
+K-tile partial product, inside the fp32 accumulator), the ExSdotp
+structure of eq. 1 is preserved per block: multiply narrow, accumulate
+wide across the whole K loop, round once on the final write.
+
+With pow2 scales (the default) the divide and the rescale are exact, so
+the only rounding anywhere is (a) the mantissa cast into the minifloat
+format and (b) the single final downcast — the same two roundings the
+paper's hardware performs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ._compat import CompilerParams
+
+__all__ = ["blockscale_gemm_pallas"]
+
+
+def _kernel(a_ref, b_ref, sa_ref, sb_ref, o_ref, acc_ref,
+            *, q_dtype_a, q_dtype_b):
+    """One (i, j, k) grid step of the fused quantize+GEMM.
+
+    acc += dequant(cast(A_ik / sa), cast(B_kj / sb)) with the per-block
+    rescale ``sa * sb`` folded into the accumulator update; single
+    rounding into ``o_ref.dtype`` on the last K step.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    sa = sa_ref[0, 0]
+    sb = sb_ref[0, 0]
+    # quantize in VMEM: one scale per (block_m, block_k) / (block_k,
+    # block_n) tile — the CAST unit fused into the GEMM's stream
+    aq = (a_ref[...].astype(jnp.float32) / sa).astype(q_dtype_a)
+    bq = (b_ref[...].astype(jnp.float32) / sb).astype(q_dtype_b)
+    # expanding multiply + per-block dequant at accumulator granularity
+    acc_ref[...] += jnp.dot(
+        aq.astype(jnp.float32), bq.astype(jnp.float32),
+        preferred_element_type=jnp.float32) * (sa * sb)
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _write():
+        # the single rounding of the whole per-output-tile ExSdotp chain
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("q_dtype_a", "q_dtype_b", "out_dtype",
+                     "block_m", "block_n", "block_k", "interpret"))
+def blockscale_gemm_pallas(a: jax.Array, b: jax.Array,
+                           sa: jax.Array, sb: jax.Array, *,
+                           q_dtype_a, q_dtype_b, out_dtype=jnp.float32,
+                           block_m: int = 128, block_n: int = 128,
+                           block_k: int = 128,
+                           interpret: bool = False) -> jax.Array:
+    """C = downcast(sum_k (A_ik/sa→q)·(B_kj/sb→q) · sa·sb), fp32 accum.
+
+    ``a[M, K]``/``b[K, N]`` are high-precision (fp32/bf16) operands;
+    ``sa[M/bm, K/bk]``/``sb[K/bk, N/bn]`` are per-block dequant scales
+    (f32, from ``core.scaling.compute_block_scales``).  Shapes must be
+    multiples of the block sizes (``ops.py`` pads).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0, (
+        (m, n, k), (block_m, block_n, block_k))
+    assert sa.shape == (m // block_m, k // block_k), sa.shape
+    assert sb.shape == (k // block_k, n // block_n), sb.shape
+    grid = (m // block_m, n // block_n, k // block_k)
+    kern = functools.partial(_kernel, q_dtype_a=jnp.dtype(q_dtype_a),
+                             q_dtype_b=jnp.dtype(q_dtype_b))
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, 1), lambda i, j, kk: (i, kk),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1), lambda i, j, kk: (kk, j),
+                         memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(a, b, sa.astype(jnp.float32), sb.astype(jnp.float32))

@@ -16,12 +16,14 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from ..core.scaling import BlockScaleConfig, compute_block_scales
 from . import ref
+from .blockscale_gemm import blockscale_gemm_pallas
 from .exsdotp_gemm import exsdotp_gemm_pallas, default_blocks
 from .quant import quant_blockwise_pallas
 
-__all__ = ["exsdotp_gemm", "quantize_tensor", "quantize_blockwise",
-           "dequantize_blockwise", "resolve_impl"]
+__all__ = ["exsdotp_gemm", "blockscale_gemm", "quantize_tensor",
+           "quantize_blockwise", "dequantize_blockwise", "resolve_impl"]
 
 
 def resolve_impl(impl: str) -> str:
@@ -55,6 +57,47 @@ def exsdotp_gemm(a: jax.Array, b: jax.Array, scale=1.0, *,
         out_dtype=out_dtype, block_m=bm, block_n=bn, block_k=bk,
         interpret=(impl == "pallas_interpret"))
     return out[:m, :n]
+
+
+def blockscale_gemm(a: jax.Array, b: jax.Array, *, q_dtype_a, q_dtype_b=None,
+                    cfg: BlockScaleConfig = BlockScaleConfig(),
+                    out_dtype=jnp.float32, impl: str = "auto") -> jax.Array:
+    """Fused block-scaled expanding GEMM (DESIGN.md §3).
+
+    Takes *high-precision* ``a[M, K]`` / ``b[K, N]`` (fp32/bf16), computes
+    per-(row-tile × K-tile) scales, and quantizes into
+    ``q_dtype_a``/``q_dtype_b`` inside the GEMM itself — the quantized
+    tensors never round-trip HBM.  fp32 accumulation, one final rounding.
+    """
+    impl = resolve_impl(impl)
+    q_dtype_b = q_dtype_a if q_dtype_b is None else q_dtype_b
+    m, k = a.shape
+    _, n = b.shape
+    bm = min(cfg.block_m, _ceil_mult(m))
+    bn = min(cfg.block_n, _ceil_mult(n))
+    bk = min(cfg.block_k, _ceil_mult(k))
+    a = _pad2(a, bm, bk)
+    b = _pad2(b, bk, bn)
+    sa = compute_block_scales(a, bm, bk, q_dtype_a,
+                              margin=cfg.margin, pow2=cfg.pow2)
+    sb = compute_block_scales(b, bk, bn, q_dtype_b,
+                              margin=cfg.margin, pow2=cfg.pow2)
+    if impl == "xla":
+        out = ref.blockscale_gemm_ref(
+            a, b, sa, sb, q_dtype_a=q_dtype_a, q_dtype_b=q_dtype_b,
+            block_m=bm, block_n=bn, block_k=bk, out_dtype=out_dtype)
+    else:
+        out = blockscale_gemm_pallas(
+            a, b, sa, sb, q_dtype_a=q_dtype_a, q_dtype_b=q_dtype_b,
+            out_dtype=out_dtype, block_m=bm, block_n=bn, block_k=bk,
+            interpret=(impl == "pallas_interpret"))
+    return out[:m, :n]
+
+
+def _ceil_mult(dim: int, unit: int = 8) -> int:
+    """Smallest block size for a dim smaller than the configured block:
+    round the dim up to the sublane unit so tiny GEMMs stay legal."""
+    return max(unit, dim + (-dim) % unit)
 
 
 @functools.partial(jax.jit, static_argnames=("q_dtype", "margin"))

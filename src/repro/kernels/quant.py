@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import CompilerParams
+
 __all__ = ["quant_blockwise_pallas"]
 
 
@@ -62,7 +64,7 @@ def quant_blockwise_pallas(x: jax.Array, *, q_dtype,
             jax.ShapeDtypeStruct((m, n), q_dtype),
             jax.ShapeDtypeStruct((m // block_m, n // block_n), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(x)

@@ -4,7 +4,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["exsdotp_gemm_ref", "quant_blockwise_ref"]
+__all__ = ["exsdotp_gemm_ref", "quant_blockwise_ref", "blockscale_gemm_ref"]
 
 
 def exsdotp_gemm_ref(a: jax.Array, b: jax.Array, scale=1.0,
@@ -30,6 +30,34 @@ def quant_blockwise_ref(x: jax.Array, *, q_dtype, block_m=128, block_n=128,
     s = jnp.where(amax > 0, amax / (max_normal * margin), 1.0)
     q = (xb / s[:, None, :, None]).astype(q_dtype)
     return q.reshape(m, n), s
+
+
+def blockscale_gemm_ref(a: jax.Array, b: jax.Array, sa: jax.Array,
+                        sb: jax.Array, *, q_dtype_a, q_dtype_b,
+                        block_m=128, block_n=128, block_k=128,
+                        out_dtype=jnp.float32) -> jax.Array:
+    """Oracle for the fused block-scaled GEMM (same math, pure jnp).
+
+    Quantize each (row-tile × K-tile) of ``a`` (K-tile × col-tile of
+    ``b``) with its own scale, dequantize, fp32-accumulate, round once.
+    Bit-identical to the kernel whenever fp32 accumulation is exact.
+    """
+    m, k = a.shape
+    _, n = b.shape
+    gm, gk, gn = m // block_m, k // block_k, n // block_n
+
+    def deq(x, s, br, bc, q_dtype):
+        xb = x.astype(jnp.float32).reshape(
+            x.shape[0] // br, br, x.shape[1] // bc, bc)
+        st = s[:, None, :, None]
+        q = (xb / st).astype(q_dtype).astype(jnp.float32)
+        return (q * st).reshape(x.shape)
+
+    assert (gm, gk) == sa.shape and (gk, gn) == sb.shape, (sa.shape, sb.shape)
+    af = deq(a, sa.astype(jnp.float32), block_m, block_k, q_dtype_a)
+    bf = deq(b, sb.astype(jnp.float32), block_k, block_n, q_dtype_b)
+    acc = jnp.dot(af, bf, preferred_element_type=jnp.float32)
+    return acc.astype(out_dtype)
 
 
 def flash_attention_ref(q, k, v, *, causal=True):

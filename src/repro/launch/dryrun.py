@@ -29,6 +29,8 @@ import time
 
 import jax
 
+from ..compat import set_mesh
+
 HLO_DTYPE_BYTES = {
     "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1, "f8e5m2": 1,
     "f8e4m3fn": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2,
@@ -150,7 +152,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
         cfg, shape, mesh, opt_cfg=opt_cfg, seq_shard=seq_shard,
         microbatches=microbatches)
     in_shardings = shardings_for(in_specs, mesh)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         lowered = jax.jit(fn, in_shardings=in_shardings,
                           donate_argnums=donate).lower(*args)
         t_lower = time.time() - t0
@@ -160,6 +162,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
     ma = compiled.memory_analysis()
     print(ma)                           # proves it fits (bytes per device)
     ca = compiled.cost_analysis()
+    if isinstance(ca, list):  # older jax wraps the dict in a list
+        ca = ca[0] if ca else {}
     print({k: ca.get(k) for k in ("flops", "bytes accessed")})
     hlo = compiled.as_text()
 

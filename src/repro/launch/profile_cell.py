@@ -12,6 +12,8 @@ import argparse
 
 import jax
 
+from ..compat import set_mesh
+
 
 def main():
     ap = argparse.ArgumentParser()
@@ -36,7 +38,7 @@ def main():
     fn, cell_args, in_specs, donate, model, rules = build_cell(
         cfg, shape, mesh, opt_cfg=AdamWConfig(),
         microbatches=args.microbatches)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         compiled = jax.jit(fn, in_shardings=shardings_for(in_specs, mesh),
                            donate_argnums=donate).lower(*cell_args).compile()
     hlo = compiled.as_text()

@@ -17,6 +17,8 @@ import os
 import jax
 import numpy as np
 
+from ..compat import make_mesh
+
 from ..configs import get_arch
 from ..data.pipeline import DataConfig, SyntheticTokens
 from ..models import build_model
@@ -36,9 +38,7 @@ def auto_mesh():
         if n % m == 0:
             model = m
             break
-    return jax.make_mesh(
-        (n // model, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((n // model, model), ("data", "model"))
 
 
 def main():

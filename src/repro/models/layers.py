@@ -18,8 +18,14 @@ from ..parallel.tp_gemm import (tp_applicable, tp_column_linear,
 
 def proj(x, w, b, policy, rules, impl, kind="plain", quantized=True):
     """Projection router: explicit narrow-wire TP GEMMs when applicable
-    (train/prefill with sequence parallelism), GSPMD qlinear otherwise."""
-    ok = quantized and tp_applicable(x, rules, policy)
+    (train/prefill with sequence parallelism), GSPMD qlinear otherwise.
+
+    Block-scaled policies (``policy.block_scale > 0``) always take the
+    qlinear path: the TP GEMM quantizes per-shard-tensor on the wire,
+    which would silently discard the per-block scales the policy asks
+    for (DESIGN.md §3)."""
+    ok = (quantized and getattr(policy, "block_scale", 0) == 0
+          and tp_applicable(x, rules, policy))
     if ok:
         tp = rules.model_size
         dp = 1

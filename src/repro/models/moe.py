@@ -18,7 +18,7 @@ import jax.numpy as jnp
 
 import functools
 
-from jax import shard_map
+from ..compat import shard_map
 from jax.sharding import PartitionSpec as P
 
 from ..core.linear import linear

@@ -19,7 +19,7 @@ from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+from ..compat import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 __all__ = ["compressed_psum_mean", "error_feedback_init"]

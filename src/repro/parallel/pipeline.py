@@ -18,7 +18,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+from ..compat import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 __all__ = ["gpipe"]

@@ -31,7 +31,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+from ..compat import shard_map
 from jax.sharding import PartitionSpec as P
 
 from ..core.policy import Policy

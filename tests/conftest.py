@@ -1,0 +1,73 @@
+"""Shared test fixtures.
+
+Provides a minimal deterministic stand-in for ``hypothesis`` when the
+real package is not installed (the CI image is offline).  Property tests
+then run a fixed pseudorandom parameter sweep — same invariants, fewer
+shrinking conveniences.  If ``hypothesis`` is importable it is used
+unchanged.
+"""
+import importlib.util
+import sys
+
+if importlib.util.find_spec("hypothesis") is None:
+    import functools
+    import inspect
+    import random
+    import types
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    def _integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    def _sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda rng: rng.choice(elements))
+
+    def _floats(min_value=0.0, max_value=1.0, **_kw):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    def _booleans():
+        return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+    _DEFAULT_EXAMPLES = 20
+
+    def _given(*strategies, **kw_strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples", _DEFAULT_EXAMPLES)
+                rng = random.Random(0xE5D07)  # deterministic sweep
+                for _ in range(n):
+                    drawn = [s.draw(rng) for s in strategies]
+                    named = {k: s.draw(rng) for k, s in kw_strategies.items()}
+                    fn(*args, *drawn, **named, **kwargs)
+
+            # pytest must not mistake the drawn parameters for fixtures
+            del wrapper.__wrapped__
+            wrapper.__signature__ = inspect.Signature()
+            wrapper.is_hypothesis_test = True
+            return wrapper
+
+        return deco
+
+    def _settings(**kw):
+        def deco(fn):
+            fn._max_examples = kw.get("max_examples", _DEFAULT_EXAMPLES)
+            return fn
+
+        return deco
+
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.integers = _integers
+    _st.sampled_from = _sampled_from
+    _st.floats = _floats
+    _st.booleans = _booleans
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = _given
+    _hyp.settings = _settings
+    _hyp.strategies = _st
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st

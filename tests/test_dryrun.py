@@ -28,6 +28,8 @@ def test_analyzer_matches_xla_on_scanfree_module():
     co = jax.jit(g).lower(sh(256, 256), sh(256, 256), sh(128, 256)).compile()
     ours = analyze(co.as_text())
     xla = co.cost_analysis()
+    if isinstance(xla, list):  # older jax wraps the dict in a list
+        xla = xla[0]
     assert abs(ours["flops"] / xla["flops"] - 1) < 0.1
     assert abs(ours["bytes"] / xla["bytes accessed"] - 1) < 0.25
 

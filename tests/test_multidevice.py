@@ -25,10 +25,10 @@ def test_compressed_allreduce_8dev():
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.compat import make_mesh, shard_map
         from repro.optim.grad_compress import (compressed_psum_mean,
                                                error_feedback_init)
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((8,), ("data",))
         rng = np.random.default_rng(0)
         # per-device distinct gradients, laid out on the data axis
         g_all = rng.normal(0, 1, (8, 256)).astype(np.float32)
@@ -36,7 +36,6 @@ def test_compressed_allreduce_8dev():
                             NamedSharding(mesh, P("data", None)))
 
         # reduce over data: wrap so each shard passes its own row
-        from jax import shard_map
         import functools
         def one(g, e):
             r, ne = compressed_psum_mean({"w": g}, {"w": e}, mesh, "data")
@@ -44,7 +43,7 @@ def test_compressed_allreduce_8dev():
         ef = jnp.zeros((8, 256), jnp.float32)
         efd = jax.device_put(ef, NamedSharding(mesh, P("data", None)))
 
-        @functools.partial(jax.shard_map, mesh=mesh,
+        @functools.partial(shard_map, mesh=mesh,
                            in_specs=(P("data", None), P("data", None)),
                            out_specs=(P("data", None), P("data", None)),
                            check_vma=False)
@@ -78,6 +77,7 @@ def test_sharded_train_step_matches_single_device():
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.compat import make_mesh, set_mesh
         from repro.configs import ARCHS
         from repro.models import build_model
         from repro.optim.adamw import AdamWConfig
@@ -91,6 +91,7 @@ def test_sharded_train_step_matches_single_device():
         toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 32)))
 
         def losses(mesh):
+            from contextlib import nullcontext
             state = make_train_state(model, jax.random.key(0), opt)
             rules = make_rules(mesh) if mesh else None
             step = make_train_step(model, opt, rules=rules, impl="xla")
@@ -101,17 +102,16 @@ def test_sharded_train_step_matches_single_device():
                     is_leaf=lambda x: type(x).__name__ == "PartitionSpec")
                 state["params"] = jax.tree.map(jax.device_put,
                                                state["params"], sh)
-                ctx = jax.set_mesh(mesh)
             out = []
             stepj = jax.jit(step)
-            for _ in range(3):
-                state, m = stepj(state, toks)
-                out.append(float(m["loss"]))
+            with set_mesh(mesh) if mesh is not None else nullcontext():
+                for _ in range(3):
+                    state, m = stepj(state, toks)
+                    out.append(float(m["loss"]))
             return out
 
         l1 = losses(None)
-        mesh = jax.make_mesh((2, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh((2, 2), ("data", "model"))
         l2 = losses(mesh)
         print("L1", l1); print("L2", l2)
         np.testing.assert_allclose(l1, l2, rtol=2e-2, atol=2e-2)
@@ -127,12 +127,12 @@ def test_tp_gemm_matches_reference():
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.compat import make_mesh, set_mesh
         from repro.core.policy import HFP8
         from repro.core.linear import qlinear
         from repro.parallel.sharding import make_rules
         from repro.parallel.tp_gemm import tp_column_linear, tp_row_linear
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh((2, 4), ("data", "model"))
         rules = make_rules(mesh, seq_shard=True)
         rng = np.random.default_rng(0)
         B, S, K, N = 4, 16, 32, 64
@@ -147,7 +147,7 @@ def test_tp_gemm_matches_reference():
             return (qlinear(x, w, HFP8, impl="xla")
                     .astype(jnp.float32) ** 2).sum()
 
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             vt, gt = jax.jit(jax.value_and_grad(loss_tp, (0, 1)))(x, w)
         vr, gr = jax.jit(jax.value_and_grad(loss_ref, (0, 1)))(x, w)
         assert abs(float(vt) - float(vr)) / float(vr) < 0.05, (vt, vr)
@@ -166,7 +166,7 @@ def test_tp_gemm_matches_reference():
         def loss_ref2(h, w2):
             return (qlinear(h, w2, HFP8, impl="xla")
                     .astype(jnp.float32) ** 2).sum()
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             vt2, gt2 = jax.jit(jax.value_and_grad(loss_tp2, (0, 1)))(h, w2)
         vr2, gr2 = jax.jit(jax.value_and_grad(loss_ref2, (0, 1)))(h, w2)
         assert abs(float(vt2) - float(vr2)) / float(vr2) < 0.05
@@ -182,6 +182,7 @@ def test_moe_ep_matches_reference():
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import dataclasses
         import jax, jax.numpy as jnp, numpy as np
+        from repro.compat import make_mesh, set_mesh
         from repro.configs import ARCHS
         from repro.core.policy import get_policy
         from repro.models import moe as MOE
@@ -195,10 +196,9 @@ def test_moe_ep_matches_reference():
         x = jnp.asarray(rng.normal(0, 1, (4, 8, cfg.d_model)), jnp.bfloat16)
         y_ref, aux_ref = jax.jit(lambda p, v: MOE.moe_ffn(
             v, p, cfg, policy, rules=None, impl="xla"))(params, x)
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh((2, 4), ("data", "model"))
         rules = make_rules(mesh, seq_shard=True)
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             y_ep, aux_ep = jax.jit(lambda p, v: MOE.moe_ffn_ep(
                 v, p, cfg, policy, rules=rules, impl="xla"))(params, x)
         np.testing.assert_allclose(np.asarray(y_ep, np.float32),
@@ -219,6 +219,7 @@ def test_elastic_restore_onto_mesh():
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.compat import make_mesh
         from repro.checkpoint.ckpt import CheckpointManager
         from repro.configs import ARCHS
         from repro.models import build_model
@@ -231,8 +232,7 @@ def test_elastic_restore_onto_mesh():
         mgr = CheckpointManager(d)
         mgr.save(7, params)                      # "saved on 1 chip"
 
-        mesh = jax.make_mesh((2, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh((2, 2), ("data", "model"))
         pspecs = param_pspecs(jax.eval_shape(lambda: params), mesh)
         shardings = jax.tree.map(
             lambda s: NamedSharding(mesh, s), pspecs,

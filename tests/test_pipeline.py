@@ -11,10 +11,10 @@ SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
     import jax, jax.numpy as jnp, numpy as np
+    from repro.compat import make_mesh
     from repro.parallel.pipeline import gpipe
 
-    mesh = jax.make_mesh((4,), ("stage",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((4,), ("stage",))
     rng = np.random.default_rng(0)
     S, M, mb, d = 4, 6, 8, 32
     # each stage: y = tanh(x @ w + b)

@@ -2,6 +2,7 @@
 fault-tolerant resume, gradient compression, serving."""
 import os
 
+from repro.compat import make_mesh
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -168,8 +169,7 @@ def test_compressed_psum_matches_mean_with_error_feedback():
     # plus the pure quantization error-feedback property single-device.
     from repro.optim.grad_compress import (compressed_psum_mean,
                                            error_feedback_init)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("data",))
     g = {"w": jnp.asarray(np.random.default_rng(0).normal(0, 1, (64,)),
                           jnp.float32)}
     ef = error_feedback_init(g)
