@@ -14,6 +14,13 @@ per-block, their ratio, and wall-clock of the jitted fused GEMM vs the
 separate quantize→GEMM pipeline (the fused path also saves the
 quantized tensor's HBM round-trip).
 
+A third sweep (``tp_sweep``) measures the same protocol *across the
+wire*: the shard_map TP column GEMM with sequence-sharded activations
+on a forced (data=2, model=4) host mesh, comparing the ``hfp8`` wire
+(per-shard-tensor scales) against ``hfp8_block`` (per-block scale grids
+riding alongside the fp8 payload) — block scaling × sequence
+parallelism composed (DESIGN.md §3).
+
 Run:
     PYTHONPATH=src python -m benchmarks.blockscale_gemm [--quick]
 """
@@ -101,10 +108,62 @@ def throughput(quick=False):
     print(f"per_tensor_two_pass,{_time_us(two_pass, a, b):.1f},{m}x{k}x{n}")
 
 
+def tp_sweep(quick=False):
+    """Block scaling × TP/SP: outlier accuracy across the fp8 wire.
+
+    Requires >= 8 host devices — ``main()`` forces them via XLA_FLAGS
+    before the first jax import.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.compat import make_mesh, set_mesh
+    from repro.core.policy import get_policy
+    from repro.parallel.sharding import make_rules
+    from repro.parallel.tp_gemm import tp_column_linear
+
+    if len(jax.devices()) < 8:
+        print("tp_sweep: skipped (needs 8 devices; run via __main__)")
+        return
+    mesh = make_mesh((2, 4), ("data", "model"))
+    rules = make_rules(mesh, seq_shard=True)
+    b, s, k, n, bs = (4, 32, 128, 128, 32) if quick else (4, 64, 256, 256, 64)
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(0, 0.3, (k, n)), jnp.float32).astype(
+        jnp.bfloat16)
+    print("wire,outlier_exp,nmse_per_tensor,nmse_per_block,ratio")
+    for emax in (0, 8, 16, 24, 32):
+        x = jnp.asarray(outlier_matrix(rng, b * s, k, bs, emax)
+                        .reshape(b, s, k), jnp.float32).astype(jnp.bfloat16)
+        exact = (np.asarray(x, np.float64).reshape(-1, k)
+                 @ np.asarray(w, np.float64))
+
+        def row_nmse(y):
+            err = np.asarray(y, np.float64).reshape(-1, n) - exact
+            pw = (exact ** 2).sum(1)
+            nz = pw > 0
+            return float(np.mean((err ** 2).sum(1)[nz] / pw[nz]))
+
+        with set_mesh(mesh):
+            yb = jax.jit(lambda x, w: tp_column_linear(
+                x, w, get_policy("hfp8_block"), rules))(x, w)
+            yt = jax.jit(lambda x, w: tp_column_linear(
+                x, w, get_policy("hfp8"), rules))(x, w)
+        e_b, e_t = row_nmse(yb), row_nmse(yt)
+        print(f"tp_column,{emax},{e_t:.3e},{e_b:.3e},"
+              f"{e_t / max(e_b, 1e-300):.1f}")
+
+
 def main():
+    import os
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "host_platform_device_count" not in flags:
+        # must happen before the first jax import (sweeps import lazily)
+        os.environ["XLA_FLAGS"] = (
+            flags + " --xla_force_host_platform_device_count=8").strip()
     quick = "--quick" in sys.argv
     accuracy_sweep(quick)
     throughput(quick)
+    tp_sweep(quick)
 
 
 if __name__ == "__main__":

@@ -94,6 +94,7 @@ def main() -> None:
     from benchmarks import blockscale_gemm
     blockscale_gemm.accuracy_sweep(quick)
     blockscale_gemm.throughput(quick)
+    blockscale_gemm.tp_sweep(quick)  # skips unless >= 8 (forced) devices
     print("=" * 72)
     print("## Roofline (from dry-run artifacts, if present)")
     import os

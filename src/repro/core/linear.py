@@ -44,15 +44,14 @@ def _qlinear_nd_fwd(x, w, policy: Policy, impl: str):
         # fused block-scaled path (DESIGN.md §3): per-(row-tile × K-tile)
         # scales, cast in VMEM inside the GEMM — no separate quantize pass
         # over HBM, and no quantized residuals (bwd re-quantizes fused too).
-        # Row tiles are defined on the flattened token axis, so this path
-        # does flatten leading dims (unlike the per-tensor xla branch, D1)
-        # — scale granularity must be identical across impls; sharded-dim
-        # survival for block scaling is an open ROADMAP item.
-        lead = x.shape[:-1]
+        # Native rank: row tiles live on the unflattened token axes
+        # (per-(batch, seq-tile) granularity), so sequence-sharded leading
+        # dims survive into the GEMM like the per-tensor branch (D1) —
+        # no flatten-induced GSPMD reshard.
         y = ops.blockscale_gemm(
-            x.reshape(-1, x.shape[-1]), w, q_dtype_a=policy.fwd_dtype,
+            x, w, q_dtype_a=policy.fwd_dtype,
             cfg=cfg, out_dtype=policy.compute_dtype, impl=impl)
-        return y.reshape(*lead, w.shape[-1]), (x, w)
+        return y, (x, w)
     xq, sx = ops.quantize_tensor(x, policy.fwd_dtype)
     wq, sw = ops.quantize_tensor(w, policy.fwd_dtype)
     if resolve_impl(impl) == "xla":
@@ -71,13 +70,14 @@ def _qlinear_nd_bwd(policy: Policy, impl: str, res, g):
     if cfg is not None:
         x, w = res
         cd = policy.compute_dtype
+        # dgrad: E5M2 grads × E4M3 weights, native rank (sequence shards
+        # survive); wgrad: E4M3 acts × E5M2 grads — the token contraction
+        # flattens by construction (dW sums over all tokens anyway).
+        dx = ops.blockscale_gemm(
+            g, w.T, q_dtype_a=policy.bwd_dtype, q_dtype_b=policy.fwd_dtype,
+            cfg=cfg, out_dtype=cd, impl=impl)
         g2 = g.reshape(-1, g.shape[-1])
         x2 = x.reshape(-1, x.shape[-1])
-        # dgrad: E5M2 grads × E4M3 weights; wgrad: E4M3 acts × E5M2 grads
-        # — both block-scaled at the same granularity as the forward.
-        dx = ops.blockscale_gemm(
-            g2, w.T, q_dtype_a=policy.bwd_dtype, q_dtype_b=policy.fwd_dtype,
-            cfg=cfg, out_dtype=cd, impl=impl).reshape(x.shape)
         dw = ops.blockscale_gemm(
             x2.T, g2, q_dtype_a=policy.fwd_dtype, q_dtype_b=policy.bwd_dtype,
             cfg=cfg, out_dtype=cd, impl=impl)

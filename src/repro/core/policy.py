@@ -32,6 +32,12 @@ class Policy:
     param_dtype: jnp.dtype
     #: block size for blockwise scaling; 0 = per-tensor scaling
     block_scale: int = 0
+    #: quantization headroom for block scales: the quantized amax lands
+    #: at ``block_margin * max_normal`` (< 1 reserves range)
+    block_margin: float = 1.0
+    #: round block scales up to powers of two (MX-style shared
+    #: exponents); pow2 rescaling is exact, so dequant adds no rounding
+    block_pow2: bool = True
     #: loss-scaling needed? (fp16/fp8-e5m2 gradients have narrow range)
     loss_scaling: bool = False
 

@@ -27,7 +27,7 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["loss_scale_init", "check_and_update_scale",
-           "BlockScaleConfig", "compute_block_scales"]
+           "BlockScaleConfig", "compute_block_scales", "apply_block_scales"]
 
 
 # ---------------------------------------------------------------------------
@@ -60,11 +60,18 @@ class BlockScaleConfig:
 
     @classmethod
     def from_policy(cls, policy) -> "BlockScaleConfig | None":
-        """The config a ``Policy`` asks for (None = per-tensor scaling)."""
+        """The config a ``Policy`` asks for (None = per-tensor scaling).
+
+        ``margin``/``pow2`` come from the policy's ``block_margin`` /
+        ``block_pow2`` fields, so policies can express quantization
+        headroom instead of the fields being silently dropped here.
+        """
         n = int(getattr(policy, "block_scale", 0) or 0)
         if n <= 0:
             return None
-        return cls(block_m=n, block_n=n, block_k=n)
+        return cls(block_m=n, block_n=n, block_k=n,
+                   margin=float(getattr(policy, "block_margin", 1.0)),
+                   pow2=bool(getattr(policy, "block_pow2", True)))
 
 
 def _pow2_ceil(x: jax.Array) -> jax.Array:
@@ -85,23 +92,45 @@ def _pow2_ceil(x: jax.Array) -> jax.Array:
 def compute_block_scales(x: jax.Array, block_r: int, block_c: int,
                          q_dtype, *, margin: float = 1.0,
                          pow2: bool = True) -> jax.Array:
-    """Per-(block_r × block_c)-tile dequant scales for ``x[R, C]``.
+    """Per-(block_r × block_c)-tile dequant scales for ``x[..., R, C]``.
 
-    Returns ``s[R//block_r, C//block_c]`` (f32) such that ``x / s``
+    Returns ``s[..., R//block_r, C//block_c]`` (f32) such that ``x / s``
     (broadcast per tile) fills ``q_dtype``'s range: quantized ≈ x / s,
     dequantized = quantized * s.  All-zero tiles get scale 1.  Shapes
     must already be padded to tile multiples (``kernels.ops`` pads).
+
+    Leading dims are batch: tiles never cross them, so a 3D activation
+    gets per-(batch, row-tile × col-tile) granularity at native rank —
+    sequence-sharded leading dims survive without a flatten.
+
+    Tiles whose amax is non-finite get scale 1 so the ``inf``/``NaN``
+    elements propagate through quantize → dequant into the output (and
+    from there to ``check_and_update_scale``'s skip logic) instead of
+    being laundered into zeros by an ``inf`` scale.
     """
-    r, c = x.shape
+    *lead, r, c = x.shape
     assert r % block_r == 0 and c % block_c == 0, ((r, c), (block_r, block_c))
     xb = jnp.abs(x.astype(jnp.float32)).reshape(
-        r // block_r, block_r, c // block_c, block_c)
-    amax = jnp.max(xb, axis=(1, 3))
+        *lead, r // block_r, block_r, c // block_c, block_c)
+    amax = jnp.max(xb, axis=(-3, -1))
     max_normal = jnp.float32(jnp.finfo(q_dtype).max)
     s = amax / (max_normal * jnp.float32(margin))
     if pow2:
         s = _pow2_ceil(jnp.maximum(s, jnp.float32(2.0 ** -126)))
-    return jnp.where(amax > 0, s, jnp.float32(1.0))
+    return jnp.where((amax > 0) & jnp.isfinite(amax), s, jnp.float32(1.0))
+
+
+def apply_block_scales(x: jax.Array, s: jax.Array, block_r: int,
+                       block_c: int, *, inverse: bool = False) -> jax.Array:
+    """Broadcast per-tile scales over ``x[..., R, C]``: ``x * s`` per
+    (block_r × block_c) tile (``inverse=True`` divides — the quantize
+    direction). ``s[..., R//block_r, C//block_c]`` as produced by
+    ``compute_block_scales``; leading dims are batch."""
+    *lead, r, c = x.shape
+    xb = x.reshape(*lead, r // block_r, block_r, c // block_c, block_c)
+    st = s[..., :, None, :, None]
+    xb = xb / st if inverse else xb * st
+    return xb.reshape(x.shape)
 
 
 def loss_scale_init(initial: float = 2.0 ** 15):

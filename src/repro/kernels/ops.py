@@ -22,8 +22,9 @@ from .blockscale_gemm import blockscale_gemm_pallas
 from .exsdotp_gemm import exsdotp_gemm_pallas, default_blocks
 from .quant import quant_blockwise_pallas
 
-__all__ = ["exsdotp_gemm", "blockscale_gemm", "quantize_tensor",
-           "quantize_blockwise", "dequantize_blockwise", "resolve_impl"]
+__all__ = ["exsdotp_gemm", "blockscale_gemm", "blockscale_blocks",
+           "quantize_tensor", "quantize_blockwise", "dequantize_blockwise",
+           "resolve_impl"]
 
 
 def resolve_impl(impl: str) -> str:
@@ -37,6 +38,16 @@ def _pad2(x, bm, bn):
     pm, pn = (-m) % bm, (-n) % bn
     if pm or pn:
         x = jnp.pad(x, ((0, pm), (0, pn)))
+    return x
+
+
+def _pad_last2(x, br, bc):
+    """Zero-pad the last two dims of ``x[..., R, C]`` to tile multiples
+    (per-batch padding: leading dims untouched)."""
+    r, c = x.shape[-2], x.shape[-1]
+    pr, pc = (-r) % br, (-c) % bc
+    if pr or pc:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 2) + [(0, pr), (0, pc)])
     return x
 
 
@@ -59,24 +70,46 @@ def exsdotp_gemm(a: jax.Array, b: jax.Array, scale=1.0, *,
     return out[:m, :n]
 
 
+def blockscale_blocks(m: int, n: int, k: int,
+                      cfg: BlockScaleConfig) -> tuple[int, int, int]:
+    """Tile sizes for a block-scaled (M, K) × (K, N) GEMM.
+
+    When a dim is smaller than the configured block, the block shrinks —
+    but only down to a *legal* Pallas tile: M is sublane-only (unit 8),
+    while N and K land on a lane axis of some operand tile (N for B and
+    the output, K for A), where compiled TPU Pallas requires multiples
+    of 128.  A narrow-N GEMM (MoE router, small heads) therefore pads N
+    up to 128 instead of picking an illegal ``block_n=8``; the padded
+    columns are zero, so scales and the GEMM are unaffected.
+    """
+    bm = min(cfg.block_m, _ceil_mult(m, 8))
+    bn = min(cfg.block_n, _ceil_mult(n, 128))
+    bk = min(cfg.block_k, _ceil_mult(k, 128))
+    return bm, bn, bk
+
+
 def blockscale_gemm(a: jax.Array, b: jax.Array, *, q_dtype_a, q_dtype_b=None,
                     cfg: BlockScaleConfig = BlockScaleConfig(),
                     out_dtype=jnp.float32, impl: str = "auto") -> jax.Array:
     """Fused block-scaled expanding GEMM (DESIGN.md §3).
 
-    Takes *high-precision* ``a[M, K]`` / ``b[K, N]`` (fp32/bf16), computes
-    per-(row-tile × K-tile) scales, and quantizes into
+    Takes *high-precision* ``a[..., M, K]`` / ``b[K, N]`` (fp32/bf16),
+    computes per-(row-tile × K-tile) scales, and quantizes into
     ``q_dtype_a``/``q_dtype_b`` inside the GEMM itself — the quantized
     tensors never round-trip HBM.  fp32 accumulation, one final rounding.
+
+    ``a`` keeps native rank: leading dims are batch, row tiles are
+    per-(leading index, row-tile) and never cross a batch/sequence
+    boundary, so sharded leading dims survive into the GEMM (no flatten
+    before the xla branch; the Pallas branch flattens payload *and*
+    scale grid identically, so granularity is the same across impls).
     """
     impl = resolve_impl(impl)
     q_dtype_b = q_dtype_a if q_dtype_b is None else q_dtype_b
-    m, k = a.shape
+    *lead, m, k = a.shape
     _, n = b.shape
-    bm = min(cfg.block_m, _ceil_mult(m))
-    bn = min(cfg.block_n, _ceil_mult(n))
-    bk = min(cfg.block_k, _ceil_mult(k))
-    a = _pad2(a, bm, bk)
+    bm, bn, bk = blockscale_blocks(m, n, k, cfg)
+    a = _pad_last2(a, bm, bk)
     b = _pad2(b, bk, bn)
     sa = compute_block_scales(a, bm, bk, q_dtype_a,
                               margin=cfg.margin, pow2=cfg.pow2)
@@ -87,16 +120,22 @@ def blockscale_gemm(a: jax.Array, b: jax.Array, *, q_dtype_a, q_dtype_b=None,
             a, b, sa, sb, q_dtype_a=q_dtype_a, q_dtype_b=q_dtype_b,
             block_m=bm, block_n=bn, block_k=bk, out_dtype=out_dtype)
     else:
+        mp, kp = a.shape[-2], a.shape[-1]
         out = blockscale_gemm_pallas(
-            a, b, sa, sb, q_dtype_a=q_dtype_a, q_dtype_b=q_dtype_b,
+            a.reshape(-1, kp), b, sa.reshape(-1, sa.shape[-1]), sb,
+            q_dtype_a=q_dtype_a, q_dtype_b=q_dtype_b,
             out_dtype=out_dtype, block_m=bm, block_n=bn, block_k=bk,
             interpret=(impl == "pallas_interpret"))
-    return out[:m, :n]
+        out = out.reshape(*lead, mp, out.shape[-1])
+    return out[..., :m, :n]
 
 
 def _ceil_mult(dim: int, unit: int = 8) -> int:
     """Smallest block size for a dim smaller than the configured block:
-    round the dim up to the sublane unit so tiny GEMMs stay legal."""
+    round the dim up to ``unit``.  Sublane axes use the default 8; lane
+    axes (the last dim of any operand tile) must pass ``unit=128`` —
+    compiled TPU Pallas rejects lane tiles that are not 128-multiples
+    (masked on CPU CI because the xla/interpret impls accept them)."""
     return max(unit, dim + (-dim) % unit)
 
 
@@ -105,11 +144,16 @@ def quantize_tensor(x: jax.Array, q_dtype, margin: float = 1.0):
     """Per-tensor scaled quantization (classic FP8 recipe, XLA-fused).
 
     Returns (q, scale) with x ~= q.astype(f32) * scale.
+
+    A non-finite amax (any ``inf``/``NaN`` element) gets scale 1 so the
+    poison propagates through quantize → dequant to the output — an
+    ``inf`` scale would silently flush the whole tensor to zero.
     """
     xf = x.astype(jnp.float32)
     amax = jnp.max(jnp.abs(xf))
     max_normal = jnp.float32(jnp.finfo(q_dtype).max)
-    s = jnp.where(amax > 0, amax / (max_normal * margin), 1.0)
+    s = jnp.where((amax > 0) & jnp.isfinite(amax),
+                  amax / (max_normal * margin), 1.0)
     return (xf / s).astype(q_dtype), s
 
 

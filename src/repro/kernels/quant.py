@@ -30,7 +30,10 @@ def _kernel(x_ref, q_ref, s_ref, *, max_normal: float, margin: float):
     x = x_ref[...].astype(jnp.float32)
     amax = jnp.max(jnp.abs(x))
     # dequant scale s: quantized = x / s fills the format's range.
-    s = jnp.where(amax > 0, amax / (max_normal * margin), 1.0)
+    # Non-finite amax -> scale 1 so inf/NaN propagate to the output
+    # instead of an inf scale flushing the whole tile to zero.
+    s = jnp.where((amax > 0) & jnp.isfinite(amax),
+                  amax / (max_normal * margin), 1.0)
     q_ref[...] = (x / s).astype(q_ref.dtype)
     s_ref[0, 0] = s
 

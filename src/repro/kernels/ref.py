@@ -27,7 +27,9 @@ def quant_blockwise_ref(x: jax.Array, *, q_dtype, block_m=128, block_n=128,
     xb = x.astype(jnp.float32).reshape(gm, block_m, gn, block_n)
     amax = jnp.max(jnp.abs(xb), axis=(1, 3))
     max_normal = float(jnp.finfo(q_dtype).max)
-    s = jnp.where(amax > 0, amax / (max_normal * margin), 1.0)
+    # non-finite amax -> scale 1: poison propagates instead of zeroing
+    s = jnp.where((amax > 0) & jnp.isfinite(amax),
+                  amax / (max_normal * margin), 1.0)
     q = (xb / s[:, None, :, None]).astype(q_dtype)
     return q.reshape(m, n), s
 
@@ -41,22 +43,29 @@ def blockscale_gemm_ref(a: jax.Array, b: jax.Array, sa: jax.Array,
     Quantize each (row-tile × K-tile) of ``a`` (K-tile × col-tile of
     ``b``) with its own scale, dequantize, fp32-accumulate, round once.
     Bit-identical to the kernel whenever fp32 accumulation is exact.
+
+    ``a``/``sa`` may carry leading batch dims (``a[..., M, K]``,
+    ``sa[..., M/bm, K/bk]``): row tiles never cross them, and the
+    contraction keeps native rank (no flatten — sharded leading dims
+    survive under GSPMD).
     """
-    m, k = a.shape
+    *lead, m, k = a.shape
     _, n = b.shape
     gm, gk, gn = m // block_m, k // block_k, n // block_n
 
     def deq(x, s, br, bc, q_dtype):
         xb = x.astype(jnp.float32).reshape(
-            x.shape[0] // br, br, x.shape[1] // bc, bc)
-        st = s[:, None, :, None]
+            *x.shape[:-2], x.shape[-2] // br, br, x.shape[-1] // bc, bc)
+        st = s[..., :, None, :, None]
         q = (xb / st).astype(q_dtype).astype(jnp.float32)
         return (q * st).reshape(x.shape)
 
-    assert (gm, gk) == sa.shape and (gk, gn) == sb.shape, (sa.shape, sb.shape)
+    assert (*lead, gm, gk) == sa.shape and (gk, gn) == sb.shape, (
+        sa.shape, sb.shape)
     af = deq(a, sa.astype(jnp.float32), block_m, block_k, q_dtype_a)
     bf = deq(b, sb.astype(jnp.float32), block_k, block_n, q_dtype_b)
-    acc = jnp.dot(af, bf, preferred_element_type=jnp.float32)
+    acc = jnp.einsum("...mk,kn->...mn", af, bf,
+                     preferred_element_type=jnp.float32)
     return acc.astype(out_dtype)
 
 

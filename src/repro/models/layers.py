@@ -20,12 +20,12 @@ def proj(x, w, b, policy, rules, impl, kind="plain", quantized=True):
     """Projection router: explicit narrow-wire TP GEMMs when applicable
     (train/prefill with sequence parallelism), GSPMD qlinear otherwise.
 
-    Block-scaled policies (``policy.block_scale > 0``) always take the
-    qlinear path: the TP GEMM quantizes per-shard-tensor on the wire,
-    which would silently discard the per-block scales the policy asks
-    for (DESIGN.md §3)."""
-    ok = (quantized and getattr(policy, "block_scale", 0) == 0
-          and tp_applicable(x, rules, policy))
+    Block-scaled policies (``policy.block_scale > 0``) ride the same TP
+    path: operands quantize per-(row-tile × K-tile) block and the fp8
+    payloads ship with their scale grids riding along, so ``hfp8_block``
+    composes with sequence parallelism instead of falling back to a
+    GSPMD reshard (DESIGN.md §3, "block scaling × TP/SP")."""
+    ok = quantized and tp_applicable(x, rules, policy)
     if ok:
         tp = rules.model_size
         dp = 1

@@ -35,6 +35,8 @@ from ..compat import shard_map
 from jax.sharding import PartitionSpec as P
 
 from ..core.policy import Policy
+from ..core.scaling import (BlockScaleConfig, apply_block_scales,
+                            compute_block_scales)
 
 __all__ = ["tp_column_linear", "tp_row_linear", "tp_applicable",
            "row_applicable", "make_fsdp_gather", "embed_lookup_ep",
@@ -44,23 +46,85 @@ __all__ = ["tp_column_linear", "tp_row_linear", "tp_applicable",
 def _quant_local(x, dtype):
     xf = x.astype(jnp.float32)
     amax = jnp.max(jnp.abs(xf))
-    s = jnp.where(amax > 0, amax / jnp.float32(jnp.finfo(dtype).max), 1.0)
+    # non-finite amax -> scale 1: inf/NaN propagate instead of an inf
+    # scale flushing the shard to zero (mirrors ops.quantize_tensor)
+    s = jnp.where((amax > 0) & jnp.isfinite(amax),
+                  amax / jnp.float32(jnp.finfo(dtype).max), 1.0)
     return (xf / s).astype(dtype), s
 
 
-def _a2a_sum(partial_f32, axis, n, dim, wire_dtype=jnp.bfloat16):
+# ------------------------------------------------- block-scaled wire ------
+# The paper's recipe survives the interconnect at *block* granularity:
+# each shard quantizes per-(row-tile × K-tile) block and ships the fp8
+# payload with its tiny f32 scale grid riding along (one 4-byte scale
+# per block_m*block_k 1-byte payload elements: ~1/4096 of wire bytes at
+# the default 128); receivers dequantize per block before the f32
+# accumulation, so the ExSdotp structure — and the per-block outlier
+# robustness of DESIGN.md §3 — both hold across chips.
+
+def _fit_block(dim: int, pref: int) -> int:
+    """Largest tile size <= pref that divides ``dim``.  Shapes inside
+    shard_map are shard-local and concrete, so this runs at trace time;
+    shard boundaries then always coincide with tile boundaries, and
+    finer-than-configured tiles only tighten the scales."""
+    b = max(1, min(pref, dim))
+    while dim % b:
+        b -= 1
+    return b
+
+
+def _quant_block(x, dtype, cfg: BlockScaleConfig, pref_r: int, pref_c: int):
+    """Block-quantize ``x[..., R, C]``: per-(leading index, R-tile ×
+    C-tile) scales.  Returns ``(q, scales, (br, bc))`` — the scale grid
+    is what rides the wire next to the fp8 payload."""
+    br = _fit_block(x.shape[-2], pref_r)
+    bc = _fit_block(x.shape[-1], pref_c)
+    xf = x.astype(jnp.float32)
+    s = compute_block_scales(xf, br, bc, dtype,
+                             margin=cfg.margin, pow2=cfg.pow2)
+    q = apply_block_scales(xf, s, br, bc, inverse=True).astype(dtype)
+    return q, s, (br, bc)
+
+
+def _deq_block(q, s, br, bc):
+    """Dequantize at accumulator granularity: every element is rescaled
+    by its own block's factor *before* the f32 contraction, so the fp32
+    accumulator sees exactly the blockscale_gemm_ref math."""
+    return apply_block_scales(q.astype(jnp.float32), s, br, bc)
+
+
+def _a2a_sum(partial_f32, axis, n, dim, wire_dtype=jnp.bfloat16, cfg=None):
     """Ship narrow partials all-to-all along ``dim``, accumulate f32.
 
     With ``wire_dtype`` fp8 (§Perf D8), each source quantizes its partial
     with a private scale that rides along (n floats) — the wire halves
     again and the receiver still accumulates f32 (ExSdotp on the wire,
     now at the paper's own operand width).
+
+    With ``cfg`` (a ``BlockScaleConfig``) and an fp8 wire, quantization
+    is per-(row-tile × col-tile) block on the last two dims instead of
+    per-shard-tensor: the scale *grids* ride the a2a alongside the
+    payload, and each receiver dequantizes per block before the f32 sum
+    — the block-scaled subsystem's outlier robustness on the wire.
+    Requires ``dim`` to be the row axis (ndim-2).
     """
     sh = partial_f32.shape
     split = sh[dim] // n
+    if cfg is not None and jnp.dtype(wire_dtype).itemsize == 1:
+        assert dim == partial_f32.ndim - 2, (dim, sh)
+        br = _fit_block(split, cfg.block_m)
+        bc = _fit_block(sh[-1], cfg.block_n)
+        q, s, _ = _quant_block(partial_f32, wire_dtype, cfg, br, bc)
+        qp = q.reshape(*sh[:dim], n, split, sh[-1])
+        sp = s.reshape(*s.shape[:-2], n, split // br, s.shape[-1])
+        recv = jax.lax.all_to_all(qp, axis, split_axis=dim,
+                                  concat_axis=dim, tiled=True)
+        srecv = jax.lax.all_to_all(sp, axis, split_axis=dim,
+                                   concat_axis=dim, tiled=True)
+        return jnp.sum(_deq_block(recv, srecv, br, bc), axis=dim)
     if jnp.dtype(wire_dtype).itemsize == 1:
         amax = jnp.max(jnp.abs(partial_f32))
-        s = jnp.where(amax > 0,
+        s = jnp.where((amax > 0) & jnp.isfinite(amax),
                       amax / jnp.float32(jnp.finfo(wire_dtype).max), 1.0)
         yp = (partial_f32 / s).astype(wire_dtype).reshape(
             *sh[:dim], n, split, *sh[dim + 1:])
@@ -78,12 +142,12 @@ def _a2a_sum(partial_f32, axis, n, dim, wire_dtype=jnp.bfloat16):
     return jnp.sum(recv.astype(jnp.float32), axis=dim)
 
 
-def _grad_reduce_data(dw_f32, rules):
+def _grad_reduce_data(dw_f32, rules, dim: int = 0):
     """ZeRO gradient reduction over the data axis: bf16 a2a + f32 local
-    accumulation, landing FSDP-sharded on dim 0 (matches the param spec);
-    plus an f32 psum over the pod axis when present."""
+    accumulation, landing FSDP-sharded on ``dim`` (matches the param
+    spec); plus an f32 psum over the pod axis when present."""
     n = rules.mesh.shape[rules.fsdp_axis]
-    dw = _a2a_sum(dw_f32, rules.fsdp_axis, n, 0)
+    dw = _a2a_sum(dw_f32, rules.fsdp_axis, n, dim)
     if "pod" in rules.mesh.axis_names:
         dw = jax.lax.psum(dw, "pod")
     return dw
@@ -147,6 +211,8 @@ def tp_column_linear(x, w, policy: Policy, rules):
 
 
 def _tp_col_fwd(x, w, policy, rules):
+    if policy.block_cfg is not None:
+        return _tp_col_fwd_block(x, w, policy, rules)
     ba, axis, tp = _axes(rules)
     cd = policy.compute_dtype
     manual = set(ba) | {axis, rules.fsdp_axis}
@@ -175,6 +241,8 @@ def _tp_col_fwd(x, w, policy, rules):
 
 
 def _tp_col_bwd(policy, rules, res, g):
+    if policy.block_cfg is not None:
+        return _tp_col_bwd_block(policy, rules, res, g)
     ba, axis, tp = _axes(rules)
     xq, sxw, w = res
     cd = policy.compute_dtype
@@ -210,6 +278,86 @@ def _tp_col_bwd(policy, rules, res, g):
     return dx, dw
 
 
+def _tp_col_fwd_block(x, w, policy, rules):
+    """Column-parallel forward, block-scaled wire (DESIGN.md §3 × §4).
+
+    Each sequence shard quantizes its activations per-(batch, seq-tile ×
+    K-tile) block; the fp8 payload is all-gathered over the model axis
+    with the f32 scale grid gathered alongside (gathering shard grids
+    along the seq axis reassembles exactly the full-tensor grid, tiles
+    aligned to shard boundaries).  The receiver dequantizes per block
+    and contracts in f32 — per-block ExSdotp across chips.
+    """
+    ba, axis, tp = _axes(rules)
+    cfg = policy.block_cfg
+    cd = policy.compute_dtype
+    manual = set(ba) | {axis, rules.fsdp_axis}
+
+    @functools.partial(
+        shard_map, mesh=rules.mesh,
+        in_specs=(P(ba, axis, None), P(rules.fsdp_axis, axis)),
+        out_specs=(P(ba, None, axis), P(ba, axis, None), P(ba, axis, None)),
+        axis_names=manual, check_vma=False)
+    def fwd(xl, wl):
+        wg = jax.lax.all_gather(wl, rules.fsdp_axis, axis=0, tiled=True)
+        xq, sx, (bs, bk) = _quant_block(xl, policy.fwd_dtype, cfg,
+                                        cfg.block_m, cfg.block_k)
+        wq, sw, (bkw, bn) = _quant_block(wg, policy.fwd_dtype, cfg,
+                                         cfg.block_k, cfg.block_n)
+        xg = jax.lax.all_gather(xq, axis, axis=1, tiled=True)   # fp8 wire
+        sg = jax.lax.all_gather(sx, axis, axis=1, tiled=True)   # scale grid
+        y = jnp.einsum("bsk,kn->bsn",
+                       _deq_block(xg, sg, bs, bk),
+                       _deq_block(wq, sw, bkw, bn),
+                       preferred_element_type=jnp.float32)
+        return y.astype(cd), xq, sx
+
+    # residuals: local fp8 activations + their scale grid (weights are
+    # cheap to re-quantize in bwd; activations are not)
+    y, xq, sx = fwd(x, w)
+    return y, (xq, sx, w)
+
+
+def _tp_col_bwd_block(policy, rules, res, g):
+    ba, axis, tp = _axes(rules)
+    cfg = policy.block_cfg
+    xq, sx, w = res
+    cd = policy.compute_dtype
+    manual = set(ba) | {axis, rules.fsdp_axis}
+
+    @functools.partial(
+        shard_map, mesh=rules.mesh,
+        in_specs=(P(ba, axis, None), P(ba, axis, None),
+                  P(rules.fsdp_axis, axis), P(ba, None, axis)),
+        out_specs=(P(ba, axis, None), P(rules.fsdp_axis, axis)),
+        axis_names=manual, check_vma=False)
+    def bwd(xql, sxl, wl, gl):
+        wg = jax.lax.all_gather(wl, rules.fsdp_axis, axis=0, tiled=True)
+        wq, sw, (bkw, bn) = _quant_block(wg, policy.fwd_dtype, cfg,
+                                         cfg.block_k, cfg.block_n)
+        gq, sg, (bsg, bng) = _quant_block(gl, policy.bwd_dtype, cfg,
+                                          cfg.block_m, cfg.block_n)  # E5M2
+        gf = _deq_block(gq, sg, bsg, bng)
+        wf = _deq_block(wq, sw, bkw, bn)
+        # dgrad: partial over model (N split) -> back to seq shards
+        dpart = jnp.einsum("bsn,kn->bsk", gf, wf,
+                           preferred_element_type=jnp.float32)
+        dx = _a2a_sum(dpart, axis, tp, 1).astype(cd)
+        # wgrad: re-gather fp8 activations + their scale grids; contract
+        # local tokens; then narrow-wire ZeRO reduce-scatter over data
+        xg = jax.lax.all_gather(xql, axis, axis=1, tiled=True)
+        ssg = jax.lax.all_gather(sxl, axis, axis=1, tiled=True)
+        bs = xql.shape[1] // sxl.shape[1]
+        bk = xql.shape[2] // sxl.shape[2]
+        dwl = jnp.einsum("bsk,bsn->kn", _deq_block(xg, ssg, bs, bk), gf,
+                         preferred_element_type=jnp.float32)
+        dw = _grad_reduce_data(dwl, rules).astype(cd)
+        return dx, dw
+
+    dx, dw = bwd(xq, sx, w, g)
+    return dx, dw
+
+
 tp_column_linear.defvjp(_tp_col_fwd, _tp_col_bwd)
 
 
@@ -222,6 +370,8 @@ def tp_row_linear(x, w, policy: Policy, rules):
 
 
 def _tp_row_fwd(x, w, policy, rules):
+    if policy.block_cfg is not None:
+        return _tp_row_fwd_block(x, w, policy, rules)
     ba, axis, tp = _axes(rules)
     cd = policy.compute_dtype
     manual = set(ba) | {axis, rules.fsdp_axis}
@@ -249,6 +399,8 @@ def _tp_row_fwd(x, w, policy, rules):
 
 
 def _tp_row_bwd(policy, rules, res, g):
+    if policy.block_cfg is not None:
+        return _tp_row_bwd_block(policy, rules, res, g)
     ba, axis, tp = _axes(rules)
     xq, sx, w = res
     cd = policy.compute_dtype
@@ -274,10 +426,80 @@ def _tp_row_bwd(policy, rules, res, g):
                          xql.astype(jnp.float32) * sxl[0], gf,
                          preferred_element_type=jnp.float32)
         # ZeRO reduce over data lands on dim1 (w is [N_model, K_fsdp])
-        n_dp = rules.mesh.shape[rules.fsdp_axis]
-        dw = _a2a_sum(dwl, rules.fsdp_axis, n_dp, 1)
-        if "pod" in rules.mesh.axis_names:
-            dw = jax.lax.psum(dw, "pod")
+        dw = _grad_reduce_data(dwl, rules, dim=1)
+        return dx, dw.astype(cd)
+
+    dx, dw = bwd(xq, sx, w, g)
+    return dx, dw
+
+
+def _tp_row_fwd_block(x, w, policy, rules):
+    """Row-parallel forward, block-scaled wire: local per-block GEMM,
+    then the partial products themselves ship fp8 all-to-all with their
+    scale grids riding along (``_a2a_sum(cfg=...)``) — the receiver
+    dequantizes per block and accumulates f32 locally."""
+    ba, axis, tp = _axes(rules)
+    cfg = policy.block_cfg
+    cd = policy.compute_dtype
+    manual = set(ba) | {axis, rules.fsdp_axis}
+
+    @functools.partial(
+        shard_map, mesh=rules.mesh,
+        in_specs=(P(ba, None, axis), P(axis, rules.fsdp_axis)),
+        out_specs=(P(ba, axis, None), P(ba, None, axis), P(ba, None, axis)),
+        axis_names=manual, check_vma=False)
+    def fwd(xl, wl):
+        wg = jax.lax.all_gather(wl, rules.fsdp_axis, axis=1, tiled=True)
+        xq, sx, (bs, bk) = _quant_block(xl, policy.fwd_dtype, cfg,
+                                        cfg.block_m, cfg.block_k)
+        wq, sw, (bkw, bn) = _quant_block(wg, policy.fwd_dtype, cfg,
+                                         cfg.block_k, cfg.block_n)
+        part = jnp.einsum("bsk,kn->bsn",
+                          _deq_block(xq, sx, bs, bk),
+                          _deq_block(wq, sw, bkw, bn),
+                          preferred_element_type=jnp.float32)
+        # D8 at block granularity: forward partials ship at the paper's
+        # operand width with per-block scales; gradient-path reductions
+        # stay bf16 (one fewer rounding on the sensitive path).
+        y = _a2a_sum(part, axis, tp, 1, wire_dtype=policy.fwd_dtype,
+                     cfg=cfg)
+        return y.astype(cd), xq, sx
+
+    y, xq, sx = fwd(x, w)
+    return y, (xq, sx, w)
+
+
+def _tp_row_bwd_block(policy, rules, res, g):
+    ba, axis, tp = _axes(rules)
+    cfg = policy.block_cfg
+    xq, sx, w = res
+    cd = policy.compute_dtype
+    manual = set(ba) | {axis, rules.fsdp_axis}
+
+    @functools.partial(
+        shard_map, mesh=rules.mesh,
+        in_specs=(P(ba, None, axis), P(ba, None, axis),
+                  P(axis, rules.fsdp_axis), P(ba, axis, None)),
+        out_specs=(P(ba, None, axis), P(axis, rules.fsdp_axis)),
+        axis_names=manual, check_vma=False)
+    def bwd(xql, sxl, wl, gl):
+        wg = jax.lax.all_gather(wl, rules.fsdp_axis, axis=1, tiled=True)
+        wq, sw, (bkw, bn) = _quant_block(wg, policy.fwd_dtype, cfg,
+                                         cfg.block_k, cfg.block_n)
+        gq, sg, (bsg, bng) = _quant_block(gl, policy.bwd_dtype, cfg,
+                                          cfg.block_m, cfg.block_n)  # E5M2
+        gg = jax.lax.all_gather(gq, axis, axis=1, tiled=True)   # fp8 wire
+        ssg = jax.lax.all_gather(sg, axis, axis=1, tiled=True)  # scale grid
+        gf = _deq_block(gg, ssg, bsg, bng)                      # [B,S,N] f32
+        wf = _deq_block(wq, sw, bkw, bn)
+        dx = jnp.einsum("bsn,kn->bsk", gf, wf,
+                        preferred_element_type=jnp.float32).astype(cd)
+        bs = xql.shape[1] // sxl.shape[1]
+        bk = xql.shape[2] // sxl.shape[2]
+        dwl = jnp.einsum("bsk,bsn->kn", _deq_block(xql, sxl, bs, bk), gf,
+                         preferred_element_type=jnp.float32)
+        # ZeRO reduce over data lands on dim1 (w is [N_model, K_fsdp])
+        dw = _grad_reduce_data(dwl, rules, dim=1)
         return dx, dw.astype(cd)
 
     dx, dw = bwd(xq, sx, w, g)

@@ -204,6 +204,175 @@ def test_qlinear_block_policy_end_to_end():
     assert eb.mean() * 10 < et.mean(), (eb.mean(), et.mean())
 
 
+# --------------------------------------------- narrow lane dims (bugfix) --
+
+def test_blockscale_blocks_lane_legal():
+    """Auto-shrunk tiles must stay compiled-TPU legal: lane axes (N of B
+    and the output, K of A) are 128-multiples, M only sublane-aligned.
+    Regression: narrow-N GEMMs (MoE router, small heads) used to get
+    block_n=8 — accepted by xla/interpret, illegal on compiled Pallas."""
+    cfg = BlockScaleConfig()
+    for m, k, n in [(64, 48, 8), (8, 8, 8), (300, 200, 24), (128, 128, 128)]:
+        bm, bn, bk = ops.blockscale_blocks(m, n, k, cfg)
+        assert bn % 128 == 0, (m, k, n, bn)
+        assert bk % 128 == 0, (m, k, n, bk)
+        assert bm % 8 == 0, (m, k, n, bm)
+    # explicit sub-128 configs are the caller's choice and unchanged
+    small = BlockScaleConfig(block_m=16, block_n=16, block_k=16)
+    assert ops.blockscale_blocks(64, 64, 64, small) == (16, 16, 16)
+
+
+@pytest.mark.parametrize("fmt,q_dtype", FMTS, ids=[f[0] for f in FMTS])
+@pytest.mark.parametrize("shape", [(16, 48, 8), (8, 16, 24)], ids=str)
+def test_blockscale_narrow_bit_exact_vs_oracle(fmt, q_dtype, shape):
+    """Narrow-N / narrow-K shapes against the ``exsdotp_gemm_np`` chain
+    oracle, bit for bit, through the lane-legal auto-shrunk tiles."""
+    m, k, n = shape
+    rng = np.random.default_rng(7)
+    a = rng.integers(-7, 8, (m, k)).astype(np.float64)
+    b = rng.integers(-7, 8, (k, n)).astype(np.float64)
+    a[0, 0] = 7.0  # pin amax so the pow2 scale divides exactly
+    b[0, 0] = 7.0
+    cfg = BlockScaleConfig()
+    bm, bn, bk = ops.blockscale_blocks(m, n, k, cfg)
+    ap = np.zeros((m + (-m) % bm, k + (-k) % bk)); ap[:m, :k] = a
+    bp = np.zeros((k + (-k) % bk, n + (-n) % bn)); bp[:k, :n] = b
+    sa = np.asarray(compute_block_scales(jnp.asarray(ap, jnp.float32),
+                                         bm, bk, q_dtype))
+    sb = np.asarray(compute_block_scales(jnp.asarray(bp, jnp.float32),
+                                         bk, bn, q_dtype))
+    want = _oracle_blockscale(ap, bp, sa, sb, fmt, bm, bn, bk,
+                              "fp32")[:m, :n]
+    for impl in ("pallas_interpret", "xla"):
+        got = ops.blockscale_gemm(jnp.asarray(a, jnp.float32),
+                                  jnp.asarray(b, jnp.float32),
+                                  q_dtype_a=q_dtype, cfg=cfg, impl=impl)
+        assert got.shape == (m, n)
+        np.testing.assert_array_equal(np.asarray(got, np.float64), want)
+
+
+# --------------------------------------------- native-rank (3D) operands --
+
+def test_blockscale_gemm_native_rank_matches_flattened():
+    """3D ``a`` keeps native rank with per-(batch, seq-tile) row tiles;
+    when S is a tile multiple this is bit-identical to flattening, and
+    the xla / interpret impls agree on the same scale granularity."""
+    b, s, k, n = 3, 32, 48, 24
+    rng = np.random.default_rng(13)
+    a3 = jnp.asarray(rng.normal(0, 4, (b, s, k)), jnp.float32)
+    w = jnp.asarray(rng.normal(0, 4, (k, n)), jnp.float32)
+    cfg = BlockScaleConfig(block_m=16, block_n=16, block_k=16)
+    y3 = ops.blockscale_gemm(a3, w, q_dtype_a=jnp.float8_e4m3, cfg=cfg,
+                             impl="xla")
+    assert y3.shape == (b, s, n)
+    y2 = ops.blockscale_gemm(a3.reshape(-1, k), w,
+                             q_dtype_a=jnp.float8_e4m3, cfg=cfg, impl="xla")
+    np.testing.assert_array_equal(np.asarray(y3).reshape(-1, n),
+                                  np.asarray(y2))
+    yp = ops.blockscale_gemm(a3, w, q_dtype_a=jnp.float8_e4m3, cfg=cfg,
+                             impl="pallas_interpret")
+    tol = max(k * 2.0 ** -24, 1e-6)
+    np.testing.assert_allclose(np.asarray(yp), np.asarray(y3),
+                               rtol=tol, atol=tol * np.sqrt(k))
+    # S NOT a tile multiple: per-batch padding keeps tiles inside each
+    # batch row (never crossing batch boundaries), impls still agree
+    a3o = jnp.asarray(rng.normal(0, 4, (b, 24, k)), jnp.float32)
+    yo = ops.blockscale_gemm(a3o, w, q_dtype_a=jnp.float8_e4m3, cfg=cfg,
+                             impl="xla")
+    yop = ops.blockscale_gemm(a3o, w, q_dtype_a=jnp.float8_e4m3, cfg=cfg,
+                              impl="pallas_interpret")
+    assert yo.shape == (b, 24, n)
+    np.testing.assert_allclose(np.asarray(yop), np.asarray(yo),
+                               rtol=tol, atol=tol * np.sqrt(k))
+
+
+def test_compute_block_scales_native_rank():
+    """Leading dims are batch: the 3D grid equals the per-batch 2D grids
+    stacked — tiles never cross batch boundaries."""
+    x = jnp.asarray(RNG.normal(0, 10, (3, 32, 32)), jnp.float32)
+    s3 = compute_block_scales(x, 16, 16, jnp.float8_e4m3)
+    assert s3.shape == (3, 2, 2)
+    for i in range(3):
+        s2 = compute_block_scales(x[i], 16, 16, jnp.float8_e4m3)
+        np.testing.assert_array_equal(np.asarray(s3[i]), np.asarray(s2))
+
+
+# ------------------------------------------- non-finite handling (bugfix) --
+
+def test_nonfinite_not_laundered_per_tensor():
+    """An inf/NaN element must poison its own output, not silently zero
+    the whole tensor via an inf scale."""
+    x = jnp.asarray(RNG.normal(0, 1, (16, 16)), jnp.float32)
+    for bad in (np.inf, np.nan):
+        xb = x.at[3, 5].set(bad)
+        q, s = ops.quantize_tensor(xb, jnp.float8_e5m2)
+        assert np.isfinite(float(s))
+        deq = np.asarray(q, np.float32) * float(s)
+        assert not np.isfinite(deq[3, 5])
+        # the rest of the tensor survives (not flushed to zero)
+        mask = np.ones((16, 16), bool); mask[3, 5] = False
+        assert np.abs(deq[mask]).max() > 0
+
+
+def test_nonfinite_not_laundered_per_block():
+    x = jnp.asarray(RNG.normal(0, 1, (32, 32)), jnp.float32)
+    x = x.at[2, 3].set(jnp.inf).at[20, 20].set(jnp.nan)
+    s = np.asarray(compute_block_scales(x, 16, 16, jnp.float8_e4m3))
+    assert np.isfinite(s).all()  # poisoned tiles get neutral scale 1
+    b = jnp.asarray(RNG.normal(0, 1, (32, 8)), jnp.float32)
+    cfg = BlockScaleConfig(block_m=16, block_n=16, block_k=16)
+    out = np.asarray(ops.blockscale_gemm(x, b, q_dtype_a=jnp.float8_e4m3,
+                                         cfg=cfg, impl="xla"), np.float32)
+    # the poisoned rows are non-finite; every other row survives (the
+    # neutral scale means the poison stays confined to its own elements)
+    assert not np.isfinite(out[2]).all()
+    assert not np.isfinite(out[20]).all()
+    clean = [r for r in range(32) if r not in (2, 20)]
+    assert np.isfinite(out[clean]).all()
+
+
+def test_nonfinite_reaches_loss_scale_skip():
+    """End to end: a poisoned activation under hfp8_block produces
+    non-finite grads, which check_and_update_scale refuses to apply."""
+    from repro.core.linear import qlinear
+    from repro.core.policy import get_policy
+    from repro.core.scaling import check_and_update_scale, loss_scale_init
+    pol = get_policy("hfp8_block")
+    x = jnp.asarray(RNG.normal(0, 1, (2, 32, 32)), jnp.bfloat16)
+    x = x.at[0, 0, 0].set(jnp.inf)
+    w = jnp.asarray(RNG.normal(0, 0.3, (32, 16)), jnp.bfloat16)
+    g = jax.grad(lambda x, w: (qlinear(x, w, pol, impl="xla")
+                               .astype(jnp.float32) ** 2).sum(),
+                 argnums=1)(x, w)
+    assert not bool(jnp.isfinite(g).all())  # poison propagated, not zeroed
+    state = loss_scale_init()
+    _, new_state, skip = check_and_update_scale(state, {"w": g})
+    assert bool(skip)
+    assert float(new_state["scale"]) < float(state["scale"])
+
+
+# ------------------------------------------ policy margin/pow2 (bugfix) --
+
+def test_policy_block_margin_pow2_wired():
+    """Policies can express quantization headroom: ``block_margin`` /
+    ``block_pow2`` reach BlockScaleConfig instead of being dropped."""
+    import dataclasses
+    from repro.core.policy import get_policy
+    base = get_policy("hfp8_block")
+    assert base.block_cfg.margin == 1.0 and base.block_cfg.pow2 is True
+    p = dataclasses.replace(base, block_margin=0.5, block_pow2=False)
+    cfg = p.block_cfg
+    assert cfg.margin == 0.5 and cfg.pow2 is False
+    assert (cfg.block_m, cfg.block_n, cfg.block_k) == (128,) * 3
+    # and the margin actually lands in the scales: amax/s == margin*max
+    x = jnp.asarray(RNG.normal(0, 9, (32, 32)), jnp.float32)
+    s = np.asarray(compute_block_scales(x, 16, 16, jnp.float8_e4m3,
+                                        margin=0.5, pow2=False))
+    amax = np.abs(np.asarray(x)).reshape(2, 16, 2, 16).max((1, 3))
+    np.testing.assert_allclose(
+        amax / s, 0.5 * float(jnp.finfo(jnp.float8_e4m3).max), rtol=1e-6)
+
+
 # ---------------------------------------------------- vectorized oracle ---
 
 @settings(max_examples=40, deadline=None)
