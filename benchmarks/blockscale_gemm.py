@@ -21,6 +21,13 @@ on a forced (data=2, model=4) host mesh, comparing the ``hfp8`` wire
 riding alongside the fp8 payload) — block scaling × sequence
 parallelism composed (DESIGN.md §3).
 
+A fourth sweep (``mx_sweep``) pushes scale granularity to the MX limit
+(DESIGN.md §8): per-(row × group-of-32-along-K) E8M0 shared exponents,
+for all five predefined MX formats, against per-tensor scaling and
+128×128 block scaling.  The workload plants one hot 32-column group per
+128×128 tile — exactly the granularity block scaling cannot resolve (the
+hot group drags its whole tile's window up) but group-32 can.
+
 Run:
     PYTHONPATH=src python -m benchmarks.blockscale_gemm [--quick]
 """
@@ -153,6 +160,58 @@ def tp_sweep(quick=False):
               f"{e_t / max(e_b, 1e-300):.1f}")
 
 
+def mx_outlier_matrix(rng, m, k, group, emax, tile=128):
+    """Unit Gaussians with one hot 32-column group per (tile × tile) tile
+    — sub-tile outlier granularity, the regime MX groups exist for."""
+    x = rng.normal(0, 1, (m, k))
+    for ti in range(max(1, m // tile)):
+        for tj in range(max(1, k // tile)):
+            i = tile * ti + rng.integers(min(tile, m))
+            j = tile * tj + group * rng.integers(max(1, min(tile, k) // group))
+            x[i, j:j + group] *= 2.0 ** emax
+    return x
+
+
+def mx_sweep(quick=False):
+    """Group-32 (MX) vs per-tensor vs 128×128 block scaling accuracy."""
+    import jax.numpy as jnp
+    from repro.core.formats import MX_FORMATS
+    from repro.core.scaling import BlockScaleConfig
+    from repro.kernels import ops, ref
+
+    m, k, n = (128, 128, 64) if quick else (512, 512, 256)
+    g = 32
+    rng = np.random.default_rng(2)
+    b = jnp.asarray(rng.normal(0, 1, (k, n)), jnp.float32)
+    cfg = BlockScaleConfig()  # 128×128 tiles
+    print("format,outlier_exp,nmse_per_tensor,nmse_block128,nmse_mx_group32,"
+          "ratio_pt_over_mx,ratio_blk_over_mx")
+    for name, mx in MX_FORMATS.items():
+        q8 = jnp.float8_e4m3 if "e4m3" in name else jnp.float8_e5m2
+        for emax in (0, 8, 16, 24):
+            a = jnp.asarray(mx_outlier_matrix(rng, m, k, g, emax),
+                            jnp.float32)
+            exact = np.asarray(a, np.float64) @ np.asarray(b, np.float64)
+
+            def row_nmse(out):
+                err = np.asarray(out, np.float64) - exact
+                pw = (exact ** 2).sum(1)
+                nz = pw > 0
+                return float(np.mean((err ** 2).sum(1)[nz] / pw[nz]))
+
+            e_mx = row_nmse(ops.mx_gemm(a, b, mx_a=name))
+            # per-tensor / block baselines use the nearest fp8 dtype (the
+            # sub-byte element formats exist only on the MX path)
+            e_blk = row_nmse(ops.blockscale_gemm(a, b, q_dtype_a=q8,
+                                                 cfg=cfg))
+            aq, sa = ops.quantize_tensor(a, q8)
+            bq, sb = ops.quantize_tensor(b, q8)
+            e_pt = row_nmse(ref.exsdotp_gemm_ref(aq, bq, sa * sb))
+            print(f"{name},{emax},{e_pt:.3e},{e_blk:.3e},{e_mx:.3e},"
+                  f"{e_pt / max(e_mx, 1e-300):.1f},"
+                  f"{e_blk / max(e_mx, 1e-300):.1f}")
+
+
 def main():
     import os
     flags = os.environ.get("XLA_FLAGS", "")
@@ -163,6 +222,7 @@ def main():
     quick = "--quick" in sys.argv
     accuracy_sweep(quick)
     throughput(quick)
+    mx_sweep(quick)
     tp_sweep(quick)
 
 

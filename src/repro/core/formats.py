@@ -27,8 +27,13 @@ import numpy as np
 __all__ = [
     "MiniFloatFormat",
     "FP8", "FP8ALT", "FP16", "FP16ALT", "FP32", "FP64",
+    "FP6E2M3", "FP6E3M2", "FP4E2M1",
     "FORMATS", "get_format", "quantize", "quantize_np",
     "encode_np", "decode_np",
+    "MXFormat", "MXFP8E4M3", "MXFP8E5M2", "MXFP6E2M3", "MXFP6E3M2",
+    "MXFP4E2M1", "MX_FORMATS", "get_mx_format",
+    "E8M0_BIAS", "E8M0_NAN", "e8m0_encode_np", "e8m0_decode_np",
+    "mx_group_scales_np", "mx_quantize_np", "mx_dequantize_np",
 ]
 
 
@@ -42,6 +47,14 @@ class MiniFloatFormat:
     #: 'ieee'  -> overflow rounds to +-inf (paper semantics)
     #: 'saturate' -> overflow clamps to +-max_normal ("fn"-style, TPU casts)
     inf_behavior: str = "ieee"
+    #: IEEE reserves the top exponent code for inf/NaN.  OCP MX sub-byte
+    #: element formats (FP6/FP4) spend it on normals instead: no inf, no
+    #: NaN — non-finite values are expressed at the *group* level via the
+    #: E8M0 NaN scale.  With ``ieee_specials=False``, overflow (including
+    #: true inf) clamps to ±max_normal and a NaN value encodes to the
+    #: max-magnitude bit pattern (decode cannot round-trip it; the MX
+    #: layer never encodes a NaN element because its group scale is NaN).
+    ieee_specials: bool = True
 
     # ---- derived quantities ----------------------------------------
     @property
@@ -54,7 +67,7 @@ class MiniFloatFormat:
 
     @property
     def max_exp(self) -> int:  # unbiased exponent of largest normal
-        return (1 << self.exp_bits) - 2 - self.bias
+        return (1 << self.exp_bits) - (2 if self.ieee_specials else 1) - self.bias
 
     @property
     def min_exp(self) -> int:  # unbiased exponent of smallest normal
@@ -80,6 +93,16 @@ class MiniFloatFormat:
     def ml_dtype(self) -> Optional[np.dtype]:
         """Native ml_dtypes counterpart, if one exists (exact match)."""
         key = (self.exp_bits, self.man_bits)
+        if not self.ieee_specials:
+            # OCP "fn" dtypes: no inf/NaN, saturating casts — only present
+            # in newer ml_dtypes releases, hence the getattr guards.
+            fn_table = {
+                (2, 3): getattr(ml_dtypes, "float6_e2m3fn", None),
+                (3, 2): getattr(ml_dtypes, "float6_e3m2fn", None),
+                (2, 1): getattr(ml_dtypes, "float4_e2m1fn", None),
+            }
+            t = fn_table.get(key)
+            return np.dtype(t) if t is not None else None
         table = {
             (5, 2): np.dtype(ml_dtypes.float8_e5m2),
             (4, 3): np.dtype(ml_dtypes.float8_e4m3),
@@ -114,7 +137,17 @@ FP16ALT = MiniFloatFormat("fp16alt", 8, 7)
 FP32 = MiniFloatFormat("fp32", 8, 23)
 FP64 = MiniFloatFormat("fp64", 11, 52)
 
-FORMATS = {f.name: f for f in (FP8, FP8ALT, FP16, FP16ALT, FP32, FP64)}
+# OCP MX sub-byte element formats (no inf/NaN; saturating overflow).
+# Max normals: E2M3 -> 7.5, E3M2 -> 28, E2M1 -> 6.
+FP6E2M3 = MiniFloatFormat("fp6e2m3", 2, 3, inf_behavior="saturate",
+                          ieee_specials=False)
+FP6E3M2 = MiniFloatFormat("fp6e3m2", 3, 2, inf_behavior="saturate",
+                          ieee_specials=False)
+FP4E2M1 = MiniFloatFormat("fp4e2m1", 2, 1, inf_behavior="saturate",
+                          ieee_specials=False)
+
+FORMATS = {f.name: f for f in (FP8, FP8ALT, FP16, FP16ALT, FP32, FP64,
+                               FP6E2M3, FP6E3M2, FP4E2M1)}
 
 #: ExSdotp source->destination pairing (paper Table I): expanding ops double
 #: the width. 8-bit formats expand into FP16/FP16alt; 16-bit into FP32.
@@ -180,12 +213,15 @@ def _quantize_f32(x: jax.Array, fmt: MiniFloatFormat) -> jax.Array:
         deep_bits = (qi.astype(jnp.uint32) << (149 + sub_step)) | (bits & jnp.uint32(0x80000000))
         deep = jax.lax.bitcast_convert_type(deep_bits, jnp.float32)
         q = jnp.where(biased == 0, deep, q)
-    # overflow: beyond max_normal rounds to inf (ieee) or clamps (saturate)
+    # overflow: beyond max_normal rounds to inf (ieee) or clamps (saturate);
+    # formats with no inf encoding (ieee_specials=False) clamp true inf too
     max_normal = jnp.float32(fmt.max_normal)
     if fmt.inf_behavior == "ieee":
         over = jnp.where(jnp.isinf(x), x, jnp.sign(x) * jnp.inf)
-    else:
+    elif fmt.ieee_specials:
         over = jnp.where(jnp.isinf(x), x, jnp.sign(x) * max_normal)
+    else:
+        over = jnp.sign(x) * max_normal
     q = jnp.where(jnp.abs(q) > max_normal, over.astype(jnp.float32), q)
     # NaN propagates through the arithmetic already; +-0 preserved by round.
     return q
@@ -219,8 +255,10 @@ def quantize_np(x: np.ndarray, fmt) -> np.ndarray:
         q = np.round(x / np.where(step == 0, 1.0, step)) * step
         if fmt.inf_behavior == "ieee":
             over = np.where(np.isinf(x), x, np.sign(x) * np.inf)
-        else:
+        elif fmt.ieee_specials:
             over = np.where(np.isinf(x), x, np.sign(x) * fmt.max_normal)
+        else:
+            over = np.sign(x) * fmt.max_normal
         q = np.where(np.abs(q) > fmt.max_normal, over, q)
         q = np.where(np.isnan(x), np.nan, q)
     return q
@@ -251,9 +289,15 @@ def encode_np(x: np.ndarray, fmt) -> np.ndarray:
         man_sub = np.rint(aq / fmt.min_subnormal).astype(np.uint64)
     exp_field = np.where(sub, 0, np.clip(exp_norm, 0, (1 << fmt.exp_bits) - 1)).astype(np.uint64)
     man_field = np.where(sub, man_sub, man_norm).astype(np.uint64)
-    exp_field = np.where(inf | nan, (1 << fmt.exp_bits) - 1, exp_field)
-    man_field = np.where(inf, 0, man_field)
-    man_field = np.where(nan, 1 << (fmt.man_bits - 1), man_field)  # quiet NaN
+    if fmt.ieee_specials:
+        exp_field = np.where(inf | nan, (1 << fmt.exp_bits) - 1, exp_field)
+        man_field = np.where(inf, 0, man_field)
+        man_field = np.where(nan, 1 << (fmt.man_bits - 1), man_field)  # quiet NaN
+    else:
+        # no special codes: quantize already clamped inf, NaN encodes to
+        # the max-magnitude pattern (the MX group scale carries the NaN)
+        exp_field = np.where(nan, (1 << fmt.exp_bits) - 1, exp_field)
+        man_field = np.where(nan, (1 << fmt.man_bits) - 1, man_field)
     out = (sign << (fmt.exp_bits + fmt.man_bits)) | (exp_field << fmt.man_bits) | man_field
     nbytes = max(8, 1 << (fmt.width - 1).bit_length())
     return out.astype(np.dtype(f"uint{nbytes}"))
@@ -266,7 +310,7 @@ def decode_np(bits: np.ndarray, fmt) -> np.ndarray:
     exp_f = ((bits >> fmt.man_bits) & ((1 << fmt.exp_bits) - 1)).astype(np.int64)
     man_f = (bits & ((1 << fmt.man_bits) - 1)).astype(np.int64)
     is_sub = exp_f == 0
-    is_special = exp_f == (1 << fmt.exp_bits) - 1
+    is_special = (exp_f == (1 << fmt.exp_bits) - 1) & fmt.ieee_specials
     with np.errstate(all="ignore"):
         val_norm = np.ldexp(1.0 + man_f / (1 << fmt.man_bits), exp_f - fmt.bias)
         val_sub = man_f * fmt.min_subnormal
@@ -274,3 +318,127 @@ def decode_np(bits: np.ndarray, fmt) -> np.ndarray:
     val = np.where(is_special & (man_f == 0), np.inf, val)
     val = np.where(is_special & (man_f != 0), np.nan, val)
     return np.where(sign == 1, -val, val)
+
+
+# ---------------------------------------------------------------------------
+# MX formats: element format × E8M0 shared scale × group size (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MXFormat:
+    """An OCP-MX-style block format: ``group`` consecutive elements along
+    the contraction (K) axis share one E8M0 scale (8 exponent bits, no
+    mantissa, no sign — a pure power of two), each element stored in
+    ``elem``.  The shared scale is the Flexpoint/Graphcore mechanism that
+    makes sub-byte training survive real activation distributions: the
+    dynamic-range window tracks each 32-element group, not the tensor.
+
+    Differences from ``BlockScaleConfig`` tiles (DESIGN.md §3): groups are
+    1×``group`` strips along K only (not 2-D tiles), the scale is a
+    *storable 8-bit* E8M0 code rather than a free f32, and a non-finite
+    group encodes scale=NaN (E8M0 0xFF) — the whole group reads back NaN —
+    instead of the neutral-scale poison-propagation of the f32 path.
+    """
+
+    name: str
+    elem: MiniFloatFormat
+    group: int = 32
+
+    @property
+    def bits_per_element(self) -> float:
+        """Storage cost incl. the amortized shared scale."""
+        return self.elem.width + 8 / self.group
+
+    def __str__(self) -> str:  # pragma: no cover - cosmetic
+        return f"{self.name}({self.elem.name}xg{self.group})"
+
+
+MXFP8E4M3 = MXFormat("mxfp8e4m3", FP8ALT)
+MXFP8E5M2 = MXFormat("mxfp8e5m2", FP8)
+MXFP6E2M3 = MXFormat("mxfp6e2m3", FP6E2M3)
+MXFP6E3M2 = MXFormat("mxfp6e3m2", FP6E3M2)
+MXFP4E2M1 = MXFormat("mxfp4e2m1", FP4E2M1)
+
+MX_FORMATS = {f.name: f for f in (MXFP8E4M3, MXFP8E5M2, MXFP6E2M3,
+                                  MXFP6E3M2, MXFP4E2M1)}
+
+
+def get_mx_format(name) -> MXFormat:
+    if isinstance(name, MXFormat):
+        return name
+    return MX_FORMATS[str(name).lower()]
+
+
+# E8M0 scale encoding: value = 2**(code - 127) for code 0..254; 255 = NaN.
+E8M0_BIAS = 127
+E8M0_NAN = 255
+
+
+def e8m0_encode_np(s: np.ndarray) -> np.ndarray:
+    """Encode power-of-two f32 scales (or NaN) to E8M0 uint8 codes."""
+    s = np.asarray(s, np.float64)
+    nan = ~np.isfinite(s)
+    with np.errstate(all="ignore"):
+        m, e = np.frexp(s)  # s = m * 2^e, m == 0.5 exactly for pow2 s
+    assert np.all(nan | ((m == 0.5) & (s > 0))), "E8M0 scales must be pow2"
+    code = np.clip(e - 1 + E8M0_BIAS, 0, 254)
+    return np.where(nan, E8M0_NAN, code).astype(np.uint8)
+
+
+def e8m0_decode_np(code: np.ndarray) -> np.ndarray:
+    code = np.asarray(code).astype(np.int64)
+    val = np.ldexp(1.0, np.clip(code, 0, 254) - E8M0_BIAS)
+    return np.where(code == E8M0_NAN, np.nan, val)
+
+
+def _pow2_ceil_np(v: np.ndarray) -> np.ndarray:
+    """Smallest power of two >= v for finite v > 0 (exact, via frexp)."""
+    with np.errstate(all="ignore"):
+        m, e = np.frexp(v)
+    return np.where(m == 0.5, np.ldexp(1.0, e - 1), np.ldexp(1.0, e))
+
+
+def mx_group_scales_np(x: np.ndarray, mx) -> np.ndarray:
+    """E8M0 group scales for ``x[..., K]`` — the numpy oracle.
+
+    Mirrors ``core.scaling.compute_group_scales`` bit for bit: the
+    amax/max_normal division is performed in float32 (matching the
+    kernel's arithmetic), the pow2-ceil is exact, and the result is
+    clamped to the E8M0-representable [2^-126, 2^127] window the JAX
+    ``_pow2_ceil`` produces.  amax == 0 -> neutral scale 1; non-finite
+    amax -> NaN (the E8M0 NaN encoding: the whole group reads back NaN).
+    """
+    mx = get_mx_format(mx)
+    *lead, k = x.shape
+    assert k % mx.group == 0, (k, mx.group)
+    xg = np.abs(np.asarray(x, np.float32)).reshape(*lead, k // mx.group,
+                                                   mx.group)
+    amax = xg.max(axis=-1)
+    with np.errstate(all="ignore"):
+        r = (amax / np.float32(mx.elem.max_normal)).astype(np.float32)
+        s = _pow2_ceil_np(np.maximum(r.astype(np.float64), 2.0 ** -126))
+    s = np.minimum(s, 2.0 ** 127)
+    s = np.where(amax == 0, 1.0, s)
+    return np.where(np.isfinite(amax), s, np.nan)
+
+
+def mx_quantize_np(x: np.ndarray, mx):
+    """Group-quantize ``x[..., K]``: returns ``(q, s)`` with ``q`` the
+    element-format values of ``x / s`` (value space, float64 carrier) and
+    ``s`` the per-group scales (``x.shape[:-1] + (K//group,)``).  The
+    division is done in float32 — exact for pow2 scales — so the kernel
+    path is bit-comparable.  A NaN scale poisons its whole group."""
+    mx = get_mx_format(mx)
+    s = mx_group_scales_np(x, mx)
+    se = np.repeat(s, mx.group, axis=-1).reshape(x.shape)
+    with np.errstate(all="ignore"):
+        scaled = (np.asarray(x, np.float32) / se.astype(np.float32))
+    return quantize_np(scaled.astype(np.float64), mx.elem), s
+
+
+def mx_dequantize_np(q: np.ndarray, s: np.ndarray, mx) -> np.ndarray:
+    mx = get_mx_format(mx)
+    se = np.repeat(np.asarray(s, np.float64), mx.group, axis=-1).reshape(
+        q.shape)
+    with np.errstate(all="ignore"):
+        return np.asarray(q, np.float64) * se

@@ -39,6 +39,15 @@ def _qlinear_nd_fwd(x, w, policy: Policy, impl: str):
     """x [..., K] @ w [K, N] — native rank: no reshape, so sharded leading
     dims (batch/sequence-parallel) survive into the GEMM instead of being
     all-gathered by a flatten (§Perf iteration D1)."""
+    if policy.mx:
+        # fused MX path (DESIGN.md §8): per-(row × group-of-32-along-K)
+        # E8M0 shared exponents, quantize-in-kernel; like the block path,
+        # residuals are the high-precision operands (bwd re-quantizes
+        # fused, in the backward formats).  Native rank: MX scales are
+        # per-row, so leading dims stay batch dims.
+        y = ops.mx_gemm(x, w, mx_a=policy.mx_fwd,
+                        out_dtype=policy.compute_dtype, impl=impl)
+        return y, (x, w)
     cfg = policy.block_cfg
     if cfg is not None:
         # fused block-scaled path (DESIGN.md §3): per-(row-tile × K-tile)
@@ -66,6 +75,20 @@ def _qlinear_nd_fwd(x, w, policy: Policy, impl: str):
 
 
 def _qlinear_nd_bwd(policy: Policy, impl: str, res, g):
+    if policy.mx:
+        x, w = res
+        cd = policy.compute_dtype
+        # dgrad: E5M2-element grads × E4M3-element weights, groups of 32
+        # along the contracted N axis; wgrad: E4M3 acts × E5M2 grads,
+        # groups along the contracted token axis (dW sums over all
+        # tokens, so the flatten is by construction).
+        dx = ops.mx_gemm(g, w.T, mx_a=policy.mx_bwd_name,
+                         mx_b=policy.mx_fwd, out_dtype=cd, impl=impl)
+        g2 = g.reshape(-1, g.shape[-1])
+        x2 = x.reshape(-1, x.shape[-1])
+        dw = ops.mx_gemm(x2.T, g2, mx_a=policy.mx_fwd,
+                         mx_b=policy.mx_bwd_name, out_dtype=cd, impl=impl)
+        return dx, dw
     cfg = policy.block_cfg
     if cfg is not None:
         x, w = res

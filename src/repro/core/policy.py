@@ -15,8 +15,8 @@ from typing import Optional
 
 import jax.numpy as jnp
 
-__all__ = ["Policy", "HFP8", "FP8E4", "BF16", "FP16", "FP32", "POLICIES",
-           "get_policy"]
+__all__ = ["Policy", "HFP8", "FP8E4", "MXFP8", "BF16", "FP16", "FP32",
+           "POLICIES", "get_policy"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,12 +38,19 @@ class Policy:
     #: round block scales up to powers of two (MX-style shared
     #: exponents); pow2 rescaling is exact, so dequant adds no rounding
     block_pow2: bool = True
+    #: MX format names (DESIGN.md §8) for the forward / backward GEMM
+    #: operands; non-empty routes every QLinear through ``ops.mx_gemm``
+    #: (groups of 32 along K, E8M0 shared scales) instead of the
+    #: per-tensor or block-scaled paths.  ``mx_bwd`` defaults to
+    #: ``mx_fwd`` when only the forward format is given.
+    mx_fwd: str = ""
+    mx_bwd: str = ""
     #: loss-scaling needed? (fp16/fp8-e5m2 gradients have narrow range)
     loss_scaling: bool = False
 
     @property
     def quantized(self) -> bool:
-        return self.fwd_dtype is not None
+        return self.fwd_dtype is not None or bool(self.mx_fwd)
 
     @property
     def block_cfg(self):
@@ -54,6 +61,14 @@ class Policy:
         """
         from .scaling import BlockScaleConfig
         return BlockScaleConfig.from_policy(self)
+
+    @property
+    def mx(self) -> bool:
+        return bool(self.mx_fwd)
+
+    @property
+    def mx_bwd_name(self) -> str:
+        return self.mx_bwd or self.mx_fwd
 
 
 # The paper's training recipe: E4M3 forward (more precision), E5M2 backward
@@ -67,12 +82,19 @@ FP8E4 = Policy("fp8e4", jnp.float8_e4m3, jnp.float8_e4m3,
 HFP8_BLOCK = Policy("hfp8_block", jnp.float8_e4m3, jnp.float8_e5m2,
                     jnp.bfloat16, jnp.float32, block_scale=128,
                     loss_scaling=True)
+#: HFP8 pairing at MX granularity (DESIGN.md §8): E4M3 elements forward,
+#: E5M2 backward, each 32-element K-group under its own E8M0 shared
+#: exponent — fwd/dgrad/wgrad all run ``ops.mx_gemm``.
+MXFP8 = Policy("mxfp8", jnp.float8_e4m3, jnp.float8_e5m2,
+               jnp.bfloat16, jnp.float32,
+               mx_fwd="mxfp8e4m3", mx_bwd="mxfp8e5m2", loss_scaling=True)
 BF16 = Policy("bf16", None, None, jnp.bfloat16, jnp.float32)
 FP16 = Policy("fp16", None, None, jnp.float16, jnp.float32,
               loss_scaling=True)
 FP32 = Policy("fp32", None, None, jnp.float32, jnp.float32)
 
-POLICIES = {p.name: p for p in (HFP8, FP8E4, HFP8_BLOCK, BF16, FP16, FP32)}
+POLICIES = {p.name: p for p in (HFP8, FP8E4, HFP8_BLOCK, MXFP8, BF16, FP16,
+                                FP32)}
 
 
 def get_policy(name) -> Policy:

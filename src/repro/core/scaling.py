@@ -27,7 +27,9 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["loss_scale_init", "check_and_update_scale",
-           "BlockScaleConfig", "compute_block_scales", "apply_block_scales"]
+           "BlockScaleConfig", "compute_block_scales", "apply_block_scales",
+           "compute_group_scales", "apply_group_scales",
+           "block_loss_scale_init", "check_and_update_block_scales"]
 
 
 # ---------------------------------------------------------------------------
@@ -133,6 +135,51 @@ def apply_block_scales(x: jax.Array, s: jax.Array, block_r: int,
     return xb.reshape(x.shape)
 
 
+# ---------------------------------------------------------------------------
+# MX group scales: shared exponents over groups of 32 along K (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+def compute_group_scales(x: jax.Array, group: int, elem_max: float,
+                         *, nan_scale: bool = True) -> jax.Array:
+    """E8M0 shared scales for ``x[..., K]``: one power-of-two f32 scale
+    per ``group`` consecutive elements of the last axis.
+
+    Returns ``s[..., K//group]`` such that ``x / s`` (broadcast per
+    group) fills the element format's range ``[-elem_max, elem_max]``.
+    E8M0 semantics: the scale is *pow2-only* (no mantissa — ``_pow2_ceil``
+    on exponent bits, so the quantize/dequant rescale is exact) and fits
+    the 8-bit biased-exponent code: values clamp to [2^-126, 2^127]
+    (within E8M0's [2^-127, 2^127] window).  All-zero groups get the
+    neutral scale 1.  A group whose amax is non-finite gets scale NaN —
+    the E8M0 NaN encoding (0xFF): the whole group reads back NaN, which
+    propagates to ``check_and_update_scale``'s skip logic.  Pass
+    ``nan_scale=False`` for the f32-path convention (neutral scale 1,
+    per-element poison) instead.
+
+    Unlike ``compute_block_scales``' 2-D tiles, groups are 1×``group``
+    strips along the contraction axis only — K-granular, M-exact — so a
+    single outlier perturbs at most 31 neighbours' quantization.
+    """
+    *lead, k = x.shape
+    assert k % group == 0, (k, group)
+    xg = jnp.abs(x.astype(jnp.float32)).reshape(*lead, k // group, group)
+    amax = jnp.max(xg, axis=-1)
+    s = _pow2_ceil(jnp.maximum(amax / jnp.float32(elem_max),
+                               jnp.float32(2.0 ** -126)))
+    s = jnp.where(amax > 0, s, jnp.float32(1.0))
+    bad = jnp.float32(jnp.nan) if nan_scale else jnp.float32(1.0)
+    return jnp.where(jnp.isfinite(amax), s, bad)
+
+
+def apply_group_scales(x: jax.Array, s: jax.Array, group: int,
+                       *, inverse: bool = False) -> jax.Array:
+    """Broadcast per-group scales over ``x[..., K]``: ``x * s`` per
+    ``group``-element strip (``inverse=True`` divides — the quantize
+    direction).  Exact for pow2 scales."""
+    se = jnp.repeat(s, group, axis=-1).reshape(x.shape)
+    return x / se if inverse else x * se
+
+
 def loss_scale_init(initial: float = 2.0 ** 15):
     return {"scale": jnp.float32(initial),
             "good_steps": jnp.zeros((), jnp.int32)}
@@ -154,4 +201,59 @@ def check_and_update_scale(state, grads, *, growth_interval: int = 2000,
         jnp.where(grow, jnp.minimum(scale * factor, max_scale), scale))
     new_state = {"scale": new_scale,
                  "good_steps": jnp.where(grow, 0, good)}
+    return unscaled, new_state, ~finite
+
+
+# ---------------------------------------------------------------------------
+# Per-block dynamic loss scaling (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+def block_loss_scale_init(n_blocks: int, initial: float = 2.0 ** 15):
+    """Per-row-tile loss-scale state: ``n_blocks`` independent scales.
+
+    The classic scheme keys the *whole step* off the worst tensor: one
+    inf anywhere halves the single global scale and skips everything.
+    With per-block state, each row tile (e.g. a microbatch's slice of
+    the token axis) carries its own scale and good-step counter, so a
+    divergence in one block backs off only that block's scale while the
+    rest keep growing — the loss-scaling analogue of per-block
+    quantization scales.
+    """
+    return {"scale": jnp.full((n_blocks,), initial, jnp.float32),
+            "good_steps": jnp.zeros((n_blocks,), jnp.int32)}
+
+
+def check_and_update_block_scales(state, grad, *, growth_interval: int = 2000,
+                                  factor: float = 2.0,
+                                  max_scale: float = 2.0 ** 24):
+    """Per-row-tile variant of ``check_and_update_scale``.
+
+    ``grad``'s leading axis is split into ``n_blocks = state['scale'].shape[0]``
+    equal contiguous row tiles, each scaled by its own ``scale[b]``.
+    Returns ``(unscaled, new_state, skip)`` where ``skip[b]`` is True for
+    tiles whose gradients contain inf/NaN — their unscaled values are not
+    trustworthy and their scale has been backed off (floor 1.0); finite
+    tiles follow the usual growth schedule (×``factor`` after
+    ``growth_interval`` clean steps, capped at ``max_scale``).
+
+    Composes with the global skip logic: ``skip.any()`` is exactly the
+    ``check_and_update_scale`` skip decision, so a trainer can either
+    mask per-tile updates or fall back to skipping the whole step.
+    """
+    n = state["scale"].shape[0]
+    m = grad.shape[0]
+    assert m % n == 0, (m, n)
+    gb = grad.astype(jnp.float32).reshape(n, m // n, *grad.shape[1:])
+    finite = jnp.all(jnp.isfinite(gb), axis=tuple(range(1, gb.ndim)))
+    scale = state["scale"]
+    bshape = (n,) + (1,) * (gb.ndim - 1)
+    unscaled = (gb / scale.reshape(bshape)).reshape(grad.shape).astype(
+        grad.dtype)
+    good = jnp.where(finite, state["good_steps"] + 1, 0)
+    grow = good >= growth_interval
+    new_scale = jnp.where(
+        ~finite, jnp.maximum(scale / factor, 1.0),
+        jnp.where(grow, jnp.minimum(scale * factor, max_scale), scale))
+    new_state = {"scale": new_scale,
+                 "good_steps": jnp.where(grow, jnp.zeros_like(good), good)}
     return unscaled, new_state, ~finite

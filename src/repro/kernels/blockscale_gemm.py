@@ -30,9 +30,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..core.formats import _quantize_f32, get_mx_format
 from ._compat import CompilerParams
 
-__all__ = ["blockscale_gemm_pallas"]
+__all__ = ["blockscale_gemm_pallas", "mx_gemm_pallas"]
 
 
 def _kernel(a_ref, b_ref, sa_ref, sb_ref, o_ref, acc_ref,
@@ -111,3 +112,100 @@ def blockscale_gemm_pallas(a: jax.Array, b: jax.Array,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(a, b, sa.astype(jnp.float32), sb.astype(jnp.float32))
+
+
+# ----------------------------------------------------------------- MX ------
+# Same fused structure at MX granularity (DESIGN.md §8).  Scales enter
+# at *element resolution* (sae[M, K], sbe[K, N] — each group's scale
+# pre-broadcast over its 32 elements): compact (M, K/32) grids would put
+# a 4-lane axis on the scale tiles, which compiled TPU Pallas rejects
+# (lane dims must be 128-multiples — the blockscale_blocks rule; masked
+# on CPU CI).  The f32 expansion costs emulation-path bandwidth only; a
+# production kernel would carry packed E8M0 bytes.  Because E8M0 scales
+# are powers of two, multiplying the *elements* by their group scale
+# before the MXU dot is bit-identical to rescaling each group's partial
+# product after it: per-group dequant at accumulator granularity with no
+# per-group inner loop.
+
+def _mx_kernel(a_ref, b_ref, sae_ref, sbe_ref, o_ref, acc_ref,
+               *, fmt_a, fmt_b):
+    """One (i, j, k) grid step of the fused MX quantize+GEMM.
+
+    acc += dequant(cast(A/sa), cast(B/sb)) with each element carrying its
+    own group's exact pow2 rescale into the f32 accumulator; a NaN (E8M0
+    0xFF) group scale poisons exactly that group's contributions.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    sae = sae_ref[...]
+    sbe = sbe_ref[...]
+    # quantize in VMEM: value-space element cast (bit-identical to the
+    # native cast where one exists; FP6/FP4 have none)
+    aq = _quantize_f32(a_ref[...].astype(jnp.float32) / sae, fmt_a)
+    bq = _quantize_f32(b_ref[...].astype(jnp.float32) / sbe, fmt_b)
+    # per-group dequant folded into the operands: exact for pow2 scales,
+    # so the accumulator sees each partial product rescaled by its own
+    # group's sa*sb — eq. 1's structure per 32-element strip
+    acc_ref[...] += jnp.dot(aq * sae, bq * sbe,
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _write():
+        # the single rounding of the whole per-output-tile ExSdotp chain
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mx_a", "mx_b", "out_dtype",
+                     "block_m", "block_n", "block_k", "interpret"))
+def mx_gemm_pallas(a: jax.Array, b: jax.Array,
+                   sae: jax.Array, sbe: jax.Array, *,
+                   mx_a, mx_b=None, out_dtype=jnp.float32,
+                   block_m: int = 128, block_n: int = 128,
+                   block_k: int = 128,
+                   interpret: bool = False) -> jax.Array:
+    """C = downcast(sum_k (A/sa→elem)·(B/sb→elem) · sa·sb), fp32 accum.
+
+    ``a[M, K]``/``b[K, N]`` are high-precision operands; ``sae[M, K]``/
+    ``sbe[K, N]`` are the per-(row × K-group) / (K-group × column) E8M0
+    scales broadcast to element resolution (f32, from
+    ``core.scaling.compute_group_scales`` + ``apply_group_scales``-style
+    repeat — ``ops.mx_gemm`` prepares them).  Shapes must be multiples
+    of the block sizes and ``block_k`` a multiple of the group
+    (``ops.mx_gemm`` pads).
+    """
+    mx_a = get_mx_format(mx_a)
+    mx_b = mx_a if mx_b is None else get_mx_format(mx_b)
+    g = mx_a.group
+    assert mx_b.group == g, (mx_a, mx_b)
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0, (
+        (m, n, k), (block_m, block_n, block_k))
+    assert block_k % g == 0, (block_k, g)
+    assert sae.shape == a.shape, (sae.shape, a.shape)
+    assert sbe.shape == b.shape, (sbe.shape, b.shape)
+    grid = (m // block_m, n // block_n, k // block_k)
+    kern = functools.partial(_mx_kernel, fmt_a=mx_a.elem, fmt_b=mx_b.elem)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(a, b, sae.astype(jnp.float32), sbe.astype(jnp.float32))

@@ -16,14 +16,17 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from ..core.scaling import BlockScaleConfig, compute_block_scales
+from ..core.formats import get_mx_format
+from ..core.scaling import (BlockScaleConfig, apply_group_scales,
+                            compute_block_scales, compute_group_scales)
 from . import ref
-from .blockscale_gemm import blockscale_gemm_pallas
+from .blockscale_gemm import blockscale_gemm_pallas, mx_gemm_pallas
 from .exsdotp_gemm import exsdotp_gemm_pallas, default_blocks
-from .quant import quant_blockwise_pallas
+from .quant import mx_quant_pallas, quant_blockwise_pallas
 
 __all__ = ["exsdotp_gemm", "blockscale_gemm", "blockscale_blocks",
            "quantize_tensor", "quantize_blockwise", "dequantize_blockwise",
+           "mx_quantize", "mx_dequantize", "mx_gemm", "mx_blocks",
            "resolve_impl"]
 
 
@@ -130,6 +133,95 @@ def blockscale_gemm(a: jax.Array, b: jax.Array, *, q_dtype_a, q_dtype_b=None,
     return out[..., :m, :n]
 
 
+# ------------------------------------------------------------------ MX ----
+
+def mx_blocks(m: int, n: int, k: int, group: int) -> tuple[int, int, int]:
+    """Tile sizes for an MX (M, K) × (K, N) GEMM.
+
+    Same legality rules as ``blockscale_blocks`` (lane axes N/K round to
+    128, sublane M to 8), plus ``block_k`` must contain whole groups —
+    with the standard group of 32 the 128-lane floor already does.
+    """
+    import math
+    bm = min(128, _ceil_mult(m, 8))
+    bn = min(128, _ceil_mult(n, 128))
+    lk = 128 * group // math.gcd(128, group)   # lcm: lane-legal, whole groups
+    bk = min(lk, _ceil_mult(k, lk))
+    return bm, bn, bk
+
+
+def mx_quantize(x: jax.Array, mx, *, impl: str = "auto"):
+    """Per-group MX quantization of ``x[..., M, K]`` (DESIGN.md §8).
+
+    Returns ``(q, scales)``: ``q[..., M, K]`` f32 element-format values
+    of ``x / s`` and ``scales[..., M, K/group]`` E8M0 pow2 scales, with
+    ``x ~= q * s`` broadcast per 1×group strip along K (exact rescale —
+    pow2).  Groups never span rows, so leading dims are free batch dims.
+    """
+    impl = resolve_impl(impl)
+    mx = get_mx_format(mx)
+    *lead, m, k = x.shape
+    assert k % mx.group == 0, (k, mx.group)
+    if impl == "xla":
+        return ref.mx_quant_ref(x, mx=mx)
+    bm, _, bk = mx_blocks(m, 1, k, mx.group)
+    xp = _pad_last2(x.astype(jnp.float32), bm, bk)
+    mp, kp = xp.shape[-2], xp.shape[-1]
+    q, s = mx_quant_pallas(xp.reshape(-1, kp), mx=mx, block_m=bm, block_k=bk,
+                           interpret=(impl == "pallas_interpret"))
+    q = q.reshape(*lead, mp, kp)[..., :m, :k]
+    s = s.reshape(*lead, mp, kp // mx.group)[..., :m, :k // mx.group]
+    return q, s
+
+
+def mx_dequantize(q: jax.Array, s: jax.Array, mx) -> jax.Array:
+    """``q * s`` per 1×group strip along the last axis (exact for pow2)."""
+    mx = get_mx_format(mx)
+    return apply_group_scales(q.astype(jnp.float32), s, mx.group)
+
+
+def mx_gemm(a: jax.Array, b: jax.Array, *, mx_a, mx_b=None,
+            out_dtype=jnp.float32, impl: str = "auto") -> jax.Array:
+    """Fused MX expanding GEMM (DESIGN.md §8).
+
+    Takes *high-precision* ``a[..., M, K]`` / ``b[K, N]``, computes
+    per-(row × group-of-32-along-K) E8M0 scales for ``a`` (per
+    (group × column) for ``b``), and quantizes into the MX element
+    formats inside the GEMM itself; fp32 accumulation, one final
+    rounding.  Leading dims of ``a`` are batch: MX scales are per-row, so
+    flattening for the Pallas branch never mixes batches.
+    """
+    impl = resolve_impl(impl)
+    mx_a = get_mx_format(mx_a)
+    mx_b = mx_a if mx_b is None else get_mx_format(mx_b)
+    g = mx_a.group
+    assert mx_b.group == g, (mx_a.name, mx_b.name)
+    *lead, m, k = a.shape
+    _, n = b.shape
+    bm, bn, bk = mx_blocks(m, n, k, g)
+    a = _pad_last2(a, bm, bk)
+    b = _pad2(b, bk, bn)
+    sa = compute_group_scales(a, g, mx_a.elem.max_normal)
+    sb = compute_group_scales(b.T, g, mx_b.elem.max_normal).T
+    if impl == "xla":
+        out = ref.mx_gemm_ref(a, b, sa, sb, mx_a=mx_a, mx_b=mx_b,
+                              out_dtype=out_dtype)
+    else:
+        mp, kp = a.shape[-2], a.shape[-1]
+        # scales enter the kernel at element resolution (compact grids
+        # would put a 4-lane axis on the scale tiles — compiled-TPU
+        # illegal); the repeat is exact, f32, emulation-path only
+        sae = jnp.repeat(sa.reshape(-1, sa.shape[-1]), g, axis=-1)
+        sbe = jnp.repeat(sb.T, g, axis=-1).T
+        out = mx_gemm_pallas(
+            a.reshape(-1, kp), b, sae, sbe,
+            mx_a=mx_a, mx_b=mx_b, out_dtype=out_dtype,
+            block_m=bm, block_n=bn, block_k=bk,
+            interpret=(impl == "pallas_interpret"))
+        out = out.reshape(*lead, mp, out.shape[-1])
+    return out[..., :m, :n]
+
+
 def _ceil_mult(dim: int, unit: int = 8) -> int:
     """Smallest block size for a dim smaller than the configured block:
     round the dim up to ``unit``.  Sublane axes use the default 8; lane
@@ -167,11 +259,10 @@ def quantize_blockwise(x: jax.Array, q_dtype, *, block_m=128, block_n=128,
         q, s = ref.quant_blockwise_ref(x, q_dtype=q_dtype, block_m=block_m,
                                        block_n=block_n, margin=margin)
         return q[:m, :n], s
-    x = _pad2(x, block_m, block_n)
-    q, s = quant_blockwise_pallas(x, q_dtype=q_dtype, block_m=block_m,
+    # the kernel pads ragged shapes itself and slices the payload back
+    return quant_blockwise_pallas(x, q_dtype=q_dtype, block_m=block_m,
                                   block_n=block_n, margin=margin,
                                   interpret=(impl == "pallas_interpret"))
-    return q[:m, :n], s
 
 
 @functools.partial(jax.jit, static_argnames=("block_m", "block_n"))

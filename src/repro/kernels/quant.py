@@ -1,16 +1,19 @@
 """Minifloat quantization kernels — the CAST unit of the extended FPU.
 
-Two granularities:
+Three granularities:
 
 * per-tensor: one scale for the whole tensor (classic FP8 recipes; the
   amax reduce runs in XLA, the cast is trivially fused by XLA too);
 * per-block (Pallas): each (bm, bn) tile computes its own amax, scale and
   cast in one VMEM pass — a beyond-paper optimization matching how modern
   FP8 training (e.g. 128x128 block scaling) bounds quantization error, and
-  the natural granularity for the ExSdotp GEMM's tiles.
+  the natural granularity for the ExSdotp GEMM's tiles;
+* per-group MX (Pallas): groups of 32 consecutive elements along the last
+  (contraction) axis share one E8M0 power-of-two scale (DESIGN.md §8) —
+  amax, pow2 scale and the value-space element cast all fused in VMEM.
 
-The kernel fuses amax + scale + cast so the tensor is read once from HBM
-and written once at 1/4-1/2 the bytes: a pure memory-roofline win.
+The kernels fuse amax + scale + cast so the tensor is read once from HBM
+and written once at a fraction of the bytes: a pure memory-roofline win.
 """
 from __future__ import annotations
 
@@ -21,9 +24,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..core.formats import _quantize_f32, get_mx_format
+from ..core.scaling import compute_group_scales
 from ._compat import CompilerParams
 
-__all__ = ["quant_blockwise_pallas"]
+__all__ = ["quant_blockwise_pallas", "mx_quant_pallas"]
 
 
 def _kernel(x_ref, q_ref, s_ref, *, max_normal: float, margin: float):
@@ -47,15 +52,22 @@ def quant_blockwise_pallas(x: jax.Array, *, q_dtype,
                            interpret: bool = False):
     """Quantize x[M,N] into ``q_dtype`` with one scale per (bm, bn) block.
 
-    Returns (q[M,N], scales[M/bm, N/bn]) with x ~= q.astype(f32) * scale
-    broadcast per block. ``margin`` < 1 reserves headroom below max_normal.
+    Returns (q[M,N], scales[ceil(M/bm), ceil(N/bn)]) with
+    x ~= q.astype(f32) * scale broadcast per block.  Non-multiple shapes
+    are zero-padded up to block multiples (exact for amax — zeros never
+    raise it — and sliced back off the payload; fully-padded blocks get
+    the neutral scale 1).  ``margin`` < 1 reserves headroom below
+    max_normal.
     """
     m, n = x.shape
-    assert m % block_m == 0 and n % block_n == 0, ((m, n), (block_m, block_n))
-    grid = (m // block_m, n // block_n)
+    pm, pn = (-m) % block_m, (-n) % block_n
+    if pm or pn:
+        x = jnp.pad(x, ((0, pm), (0, pn)))
+    mp, np_ = x.shape
+    grid = (mp // block_m, np_ // block_n)
     max_normal = float(jnp.finfo(q_dtype).max)
     kern = functools.partial(_kernel, max_normal=max_normal, margin=margin)
-    return pl.pallas_call(
+    q, s = pl.pallas_call(
         kern,
         grid=grid,
         in_specs=[pl.BlockSpec((block_m, block_n), lambda i, j: (i, j))],
@@ -64,10 +76,74 @@ def quant_blockwise_pallas(x: jax.Array, *, q_dtype,
             pl.BlockSpec((1, 1), lambda i, j: (i, j), memory_space=pltpu.SMEM),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((m, n), q_dtype),
-            jax.ShapeDtypeStruct((m // block_m, n // block_n), jnp.float32),
+            jax.ShapeDtypeStruct((mp, np_), q_dtype),
+            jax.ShapeDtypeStruct(grid, jnp.float32),
         ],
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(x)
+    return q[:m, :n], s
+
+
+# --------------------------------------------------------------- MX path --
+
+def _mx_kernel(x_ref, q_ref, se_ref, *, fmt, group: int):
+    """Fused MX group quantize for one (bm, bk) tile.
+
+    Per 1×group strip: amax -> E8M0 pow2 scale (non-finite -> NaN scale,
+    zero -> neutral 1, via ``compute_group_scales`` — the single source
+    of the E8M0 formula) -> exact pow2 divide -> value-space element
+    cast (`_quantize_f32`, bit-identical to a native cast where one
+    exists).  The scale output is written at *element resolution*
+    (``se[bm, bk]``): a compact ``(bm, bk//32)`` tile would put a
+    4-lane axis on the output — illegal on compiled TPU Pallas (lane
+    dims must be 128-multiples; masked on CPU CI) — so the wrapper
+    compacts with a strided slice instead.
+    """
+    x = x_ref[...].astype(jnp.float32)
+    bm, bk = x.shape
+    s = compute_group_scales(x, group, fmt.max_normal)
+    se = jnp.repeat(s, group, axis=-1).reshape(bm, bk)
+    q_ref[...] = _quantize_f32(x / se, fmt)
+    se_ref[...] = se
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mx", "block_m", "block_k", "interpret"))
+def mx_quant_pallas(x: jax.Array, *, mx, block_m: int = 128,
+                    block_k: int = 128, interpret: bool = False):
+    """Quantize ``x[M, K]`` into the MX format ``mx`` (name or MXFormat).
+
+    Returns ``(q[M, K] f32, scales[M, K/group] f32)``: ``q`` holds the
+    element-format values of ``x / s`` (value-space emulation — FP6/FP4
+    have no native jnp dtype, so the payload stays f32 on the emulation
+    path) and ``s`` the per-(row × group) E8M0 scales.  Shapes must be
+    multiples of the blocks (``ops.mx_quantize`` pads); ``block_k`` must
+    be a multiple of the group size.
+    """
+    mx = get_mx_format(mx)
+    m, k = x.shape
+    assert m % block_m == 0 and k % block_k == 0, ((m, k), (block_m, block_k))
+    assert block_k % mx.group == 0, (block_k, mx.group)
+    grid = (m // block_m, k // block_k)
+    kern = functools.partial(_mx_kernel, fmt=mx.elem, group=mx.group)
+    q, se = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_m, block_k), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j: (i, j)),
+            pl.BlockSpec((block_m, block_k), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, k), jnp.float32),
+            jax.ShapeDtypeStruct((m, k), jnp.float32),
+        ],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(x)
+    # compact the element-resolution scales back to one per group
+    return q, se[:, ::mx.group]

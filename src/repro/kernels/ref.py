@@ -4,7 +4,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["exsdotp_gemm_ref", "quant_blockwise_ref", "blockscale_gemm_ref"]
+from ..core.formats import get_mx_format, quantize
+
+__all__ = ["exsdotp_gemm_ref", "quant_blockwise_ref", "blockscale_gemm_ref",
+           "mx_quant_ref", "mx_gemm_ref"]
 
 
 def exsdotp_gemm_ref(a: jax.Array, b: jax.Array, scale=1.0,
@@ -64,6 +67,45 @@ def blockscale_gemm_ref(a: jax.Array, b: jax.Array, sa: jax.Array,
         sa.shape, sb.shape)
     af = deq(a, sa.astype(jnp.float32), block_m, block_k, q_dtype_a)
     bf = deq(b, sb.astype(jnp.float32), block_k, block_n, q_dtype_b)
+    acc = jnp.einsum("...mk,kn->...mn", af, bf,
+                     preferred_element_type=jnp.float32)
+    return acc.astype(out_dtype)
+
+
+def mx_quant_ref(x: jax.Array, *, mx):
+    """Oracle for the fused MX quantize kernel (same math, pure jnp).
+
+    Per-(row × group-of-32-along-K) E8M0 scales + value-space element
+    cast; returns ``(q[..., K] f32, s[..., K/group] f32)``.
+    """
+    from ..core.scaling import apply_group_scales, compute_group_scales
+    mx = get_mx_format(mx)
+    xf = x.astype(jnp.float32)
+    s = compute_group_scales(xf, mx.group, mx.elem.max_normal)
+    q = quantize(apply_group_scales(xf, s, mx.group, inverse=True), mx.elem)
+    return q, s
+
+
+def mx_gemm_ref(a: jax.Array, b: jax.Array, sa: jax.Array, sb: jax.Array,
+                *, mx_a, mx_b=None, out_dtype=jnp.float32) -> jax.Array:
+    """Oracle for the fused MX GEMM (same math, pure jnp).
+
+    Quantize each 1×group strip of ``a`` along K (group × column strip of
+    ``b``) with its own E8M0 scale, dequantize (exact — pow2 scales),
+    fp32-accumulate, round once.  Bit-identical to the kernel whenever
+    fp32 accumulation is exact.  ``a``/``sa`` may carry leading batch
+    dims (``a[..., M, K]``, ``sa[..., M, K/g]``).
+    """
+    mx_a = get_mx_format(mx_a)
+    mx_b = mx_a if mx_b is None else get_mx_format(mx_b)
+    g = mx_a.group
+
+    def deq_rows(x, s, fmt):  # groups along the last axis
+        se = jnp.repeat(s.astype(jnp.float32), g, axis=-1).reshape(x.shape)
+        return quantize(x.astype(jnp.float32) / se, fmt) * se
+
+    af = deq_rows(a, sa, mx_a.elem)
+    bf = deq_rows(b.T, sb.T, mx_b.elem).T  # b groups run along K, per column
     acc = jnp.einsum("...mk,kn->...mn", af, bf,
                      preferred_element_type=jnp.float32)
     return acc.astype(out_dtype)

@@ -24,7 +24,13 @@ def proj(x, w, b, policy, rules, impl, kind="plain", quantized=True):
     path: operands quantize per-(row-tile × K-tile) block and the fp8
     payloads ship with their scale grids riding along, so ``hfp8_block``
     composes with sequence parallelism instead of falling back to a
-    GSPMD reshard (DESIGN.md §3, "block scaling × TP/SP")."""
+    GSPMD reshard (DESIGN.md §3, "block scaling × TP/SP").
+
+    MX policies (``mxfp8`` — DESIGN.md §8) deliberately do NOT take the
+    explicit TP wire (``tp_applicable`` gates them off): its collectives
+    carry per-shard or per-block scales, not per-(row × 32-group) E8M0
+    grids.  They run the fused ``ops.mx_gemm`` under GSPMD instead,
+    which preserves MX numerics exactly under sharding."""
     ok = quantized and tp_applicable(x, rules, policy)
     if ok:
         tp = rules.model_size

@@ -189,6 +189,13 @@ def tp_applicable(x, rules, policy: Policy) -> bool:
         return False
     if not getattr(policy, "quantized", False) or x.ndim != 3:
         return False
+    if getattr(policy, "mx_fwd", ""):
+        # MX policies (DESIGN.md §8) stay on the GSPMD qlinear path: the
+        # explicit TP wire ships per-shard-tensor or per-block scales,
+        # not per-(row × 32-group) E8M0 grids — routing mxfp8 here would
+        # silently change its numerics.  GSPMD shards the fused MX GEMM
+        # instead (scales are per-row, so sharded leading dims survive).
+        return False
     if rules.fsdp_axis not in rules.mesh.axis_names:
         return False
     tp = rules.model_size

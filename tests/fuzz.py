@@ -1,0 +1,80 @@
+"""Deterministic fuzz harness: structured boundary/random generators
+shared by test_formats.py, test_blockscale.py and test_mx.py.
+
+No hypothesis dependency — every generator is a plain function of a
+seeded ``numpy.random.Generator``, so a failure reproduces from the test
+id alone.  The boundary sets are derived from the format's own
+parameters: ulp neighbours (exact halfway points exercise RNE ties),
+the subnormal plateau, the overflow threshold (max_normal + half an
+ulp — the smallest value that rounds away from max_normal), and the
+non-finite specials.
+"""
+import numpy as np
+
+
+def boundary_values(fmt) -> np.ndarray:
+    """The format-derived edge cases, positive and negative (f32)."""
+    ulp1 = 2.0 ** -fmt.man_bits                      # ulp at 1.0
+    top_ulp = 2.0 ** (fmt.max_exp - fmt.man_bits)    # ulp at max_normal
+    vals = [
+        0.0,
+        # subnormal plateau: below min_subnormal/2 rounds to zero,
+        # halfway points between subnormal steps are RNE ties
+        fmt.min_subnormal, fmt.min_subnormal / 2, fmt.min_subnormal / 4,
+        fmt.min_subnormal * 0.75, fmt.min_subnormal * 1.5,
+        fmt.min_subnormal * 2.5,
+        # normal/subnormal boundary
+        fmt.min_normal, fmt.min_normal - fmt.min_subnormal / 2,
+        fmt.min_normal + fmt.min_subnormal / 2,
+        # ulp neighbours around 1.0 (tie at 1 + ulp/2)
+        1.0, 1.0 + ulp1 / 2, 1.0 + ulp1, 1.0 + 1.5 * ulp1, 1.0 - ulp1 / 4,
+        # overflow threshold: max_normal, the last tie below it, the
+        # halfway point above it (first value that rounds away)
+        fmt.max_normal, fmt.max_normal - top_ulp / 2,
+        fmt.max_normal + top_ulp / 2, fmt.max_normal * 1.5,
+        # non-finite
+        np.inf,
+    ]
+    with np.errstate(over="ignore"):  # fp16alt/fp32 overflow f32 -> inf, fine
+        out = np.asarray(vals, np.float32)
+    out = np.concatenate([out, -out, np.asarray([np.nan], np.float32)])
+    return out
+
+
+def finite_values(rng, fmt, n: int) -> np.ndarray:
+    """Random finite values spanning the format's whole range (f32):
+    normals across every binade, subnormals, and near-overflow."""
+    binades = rng.integers(fmt.min_exp - fmt.man_bits, fmt.max_exp + 1, n)
+    mant = 1.0 + rng.random(n)
+    sign = rng.choice([-1.0, 1.0], n)
+    vals = sign * mant * np.exp2(binades.astype(np.float64))
+    return vals.astype(np.float32)
+
+
+def sample(rng, fmt, n: int = 256) -> np.ndarray:
+    """Boundary values + random finite values, shuffled (f32)."""
+    out = np.concatenate([boundary_values(fmt), finite_values(rng, fmt, n)])
+    rng.shuffle(out)
+    return out
+
+
+def group_structured(rng, m: int, k: int, group: int, emax: int = 12,
+                     *, specials: bool = True) -> np.ndarray:
+    """Matrix with per-(row × group-along-K) pow2 magnitudes — the MX
+    workload: unit Gaussians times 2^U[-emax, emax] per group, plus
+    (optionally) one all-zero group, one inf and one NaN element.
+    Magnitudes stay well inside f32 so scaled quotients never hit the
+    f32 subnormal range (where XLA's FTZ and numpy disagree)."""
+    assert k % group == 0
+    mag = 2.0 ** rng.integers(-emax, emax + 1, (m, k // group))
+    x = rng.normal(0, 1, (m, k)) * np.repeat(mag, group, axis=1)
+    if specials and m >= 3 and k >= 3 * group:
+        x[0, :group] = 0.0
+        x[1, group + 1] = np.inf
+        x[2, 2 * group + 2] = np.nan
+    return x.astype(np.float32)
+
+
+def all_bit_patterns(fmt) -> np.ndarray:
+    """Every encoding of ``fmt`` as uint64 (2**width patterns)."""
+    return np.arange(1 << fmt.width, dtype=np.uint64)

@@ -14,6 +14,7 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
+import fuzz
 from repro.core import exsdotp as X
 from repro.core import formats as F
 from repro.core.scaling import BlockScaleConfig, compute_block_scales
@@ -141,6 +142,25 @@ def test_per_block_beats_per_tensor_mse(q_dtype, emax):
     bq, sb = ops.quantize_tensor(b, q_dtype)
     pt = ref.exsdotp_gemm_ref(aq, bq, sa * sb)
     assert row_nmse(blk) * 10 < row_nmse(pt), (row_nmse(blk), row_nmse(pt))
+
+
+@pytest.mark.parametrize("q_dtype", [jnp.float8_e5m2, jnp.float8_e4m3],
+                         ids=["fp8", "fp8alt"])
+def test_blockscale_quantize_fuzz_impls_agree(q_dtype):
+    """Shared fuzz harness (tests/fuzz.py): group-structured data with
+    extreme per-strip magnitudes, a zero strip and non-finite elements —
+    the interpret-mode quantize kernel and the jnp ref must agree."""
+    x = jnp.asarray(fuzz.group_structured(
+        np.random.default_rng(2), 64, 96, 32), jnp.float32)
+    q, s = ops.quantize_blockwise(x, q_dtype, block_m=32, block_n=32,
+                                  impl="pallas_interpret")
+    qr, sr = ops.quantize_blockwise(x, q_dtype, block_m=32, block_n=32,
+                                    impl="xla")
+    np.testing.assert_array_equal(np.asarray(q, np.float32),
+                                  np.asarray(qr, np.float32))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=3e-7)
+    # non-finite tiles got the neutral scale (poison not laundered)
+    assert np.isfinite(np.asarray(s)).all()
 
 
 def test_compute_block_scales_properties():

@@ -90,6 +90,26 @@ def test_quant_blockwise_matches_ref(q_dtype, shape):
     np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=3e-7)
 
 
+@pytest.mark.parametrize("shape", [(100, 70), (1, 1), (33, 129), (8, 200)],
+                         ids=str)
+def test_quant_blockwise_pallas_ragged_direct(shape):
+    """Regression: ``quant_blockwise_pallas`` used to assert divisibility
+    and rely on the caller to pad; it now pads ragged M/N itself (like
+    ``ops`` does for the GEMMs) and slices the payload back."""
+    from repro.kernels.quant import quant_blockwise_pallas
+    m, n = shape
+    x = jnp.asarray(RNG.normal(0, 5, shape), jnp.float32)
+    q, s = quant_blockwise_pallas(x, q_dtype=jnp.float8_e4m3, block_m=32,
+                                  block_n=32, interpret=True)
+    assert q.shape == shape
+    assert s.shape == ((m + 31) // 32, (n + 31) // 32)
+    qr, sr = ops.quantize_blockwise(x, jnp.float8_e4m3, block_m=32,
+                                    block_n=32, impl="xla")
+    np.testing.assert_array_equal(np.asarray(q, np.float32),
+                                  np.asarray(qr, np.float32))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=3e-7)
+
+
 def test_quant_roundtrip_error_bound():
     """|x - dequant(quant(x))| <= 2^-m * blockmax for every block."""
     x = jnp.asarray(RNG.normal(0, 3, (256, 256)), jnp.float32)

@@ -1,0 +1,437 @@
+"""MX-format emulation (DESIGN.md §8): shared-exponent groups of 32.
+
+Three layers, mirroring test_blockscale.py:
+
+1. the numpy group-quantization oracle (``mx_quantize_np`` /
+   ``mx_group_scales_np`` / E8M0 encode-decode) is validated against
+   native ml_dtypes casts and its own invariants;
+2. the JAX scale computation and the fused Pallas kernels (interpret
+   mode) must match the oracle **bit for bit** — quantization is
+   elementwise after the per-group amax, so this holds on arbitrary
+   float data; the GEMM is checked bit-exactly on data constructed so
+   fp32 accumulation is exact (integer grids × per-group pow2
+   magnitudes, incl. a tile with per-group dynamic range 2^16 and a
+   non-finite group);
+3. the ``mxfp8`` policy end-to-end: fwd/bwd finite, close to per-tensor
+   hfp8 on well-scaled data, far better on fine-grained outliers.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import fuzz
+from repro.core import formats as F
+from repro.core.scaling import apply_group_scales, compute_group_scales
+from repro.kernels import ops
+
+MX_NAMES = list(F.MX_FORMATS)
+
+
+# ------------------------------------------------------------- constants --
+
+def test_mx_format_constants():
+    for name, mx in F.MX_FORMATS.items():
+        assert mx.group == 32
+        assert F.get_mx_format(name) is mx
+    assert F.MXFP8E4M3.elem is F.FP8ALT and F.MXFP8E5M2.elem is F.FP8
+    # OCP element max normals (no-specials formats spend the top
+    # exponent code on normals)
+    assert F.MXFP4E2M1.elem.max_normal == 6.0
+    assert F.MXFP6E2M3.elem.max_normal == 7.5
+    assert F.MXFP6E3M2.elem.max_normal == 28.0
+    assert not F.FP4E2M1.ieee_specials and F.FP4E2M1.width == 4
+    # 8 scale bits amortized over the group
+    assert F.MXFP4E2M1.bits_per_element == 4 + 8 / 32
+
+
+def test_e8m0_encode_decode():
+    exps = np.arange(-126, 128)
+    s = np.ldexp(1.0, exps)
+    code = F.e8m0_encode_np(s)
+    np.testing.assert_array_equal(code, exps + F.E8M0_BIAS)
+    np.testing.assert_array_equal(F.e8m0_decode_np(code), s)
+    # NaN round-trips through the 0xFF encoding
+    assert F.e8m0_encode_np(np.asarray([np.nan]))[0] == F.E8M0_NAN
+    assert np.isnan(F.e8m0_decode_np(np.asarray([F.E8M0_NAN]))[0])
+    # non-pow2 input is a contract violation
+    with pytest.raises(AssertionError):
+        F.e8m0_encode_np(np.asarray([3.0]))
+
+
+def test_e8m0_matches_native_ml_dtype():
+    import ml_dtypes
+    if not hasattr(ml_dtypes, "float8_e8m0fnu"):
+        pytest.skip("ml_dtypes too old for float8_e8m0fnu")
+    s = np.ldexp(1.0, np.arange(-126, 128)).astype(np.float32)
+    native = s.astype(ml_dtypes.float8_e8m0fnu).astype(np.float32)
+    np.testing.assert_array_equal(s, native)  # pow2 scales are exact
+    codes = F.e8m0_encode_np(s)
+    np.testing.assert_array_equal(
+        codes, s.astype(ml_dtypes.float8_e8m0fnu).view(np.uint8))
+
+
+# ----------------------------------------------------------- oracle layer --
+
+@pytest.mark.parametrize("name", MX_NAMES)
+def test_oracle_scale_invariants(name):
+    mx = F.get_mx_format(name)
+    x = fuzz.group_structured(np.random.default_rng(21), 8, 128, mx.group)
+    s = F.mx_group_scales_np(x, mx)
+    assert s.shape == (8, 128 // mx.group)
+    assert s[0, 0] == 1.0                      # all-zero group -> neutral
+    assert np.isnan(s[1, 1]) and np.isnan(s[2, 2])  # non-finite -> NaN scale
+    fin = np.isfinite(s)
+    lg = np.log2(s[fin])
+    assert (lg == np.round(lg)).all()          # pow2-only, no mantissa
+    assert (s[fin] >= 2.0 ** -126).all() and (s[fin] <= 2.0 ** 127).all()
+    # scaled amax fills (half, full] of the element range
+    amax = np.abs(x).reshape(8, -1, mx.group).max(-1)
+    ok = np.isfinite(amax) & (amax > 0)
+    filled = amax[ok] / s[ok]
+    assert (filled <= mx.elem.max_normal).all()
+    assert (filled > mx.elem.max_normal / 2).all()
+
+
+@pytest.mark.parametrize("name", MX_NAMES)
+def test_oracle_roundtrip_error_bound(name):
+    """|x - deq(q(x))| <= 2^-man * group_amax for finite groups — the
+    shared exponent bounds error by the *group* amax, not the tensor's."""
+    mx = F.get_mx_format(name)
+    x = fuzz.group_structured(np.random.default_rng(22), 16, 256, mx.group,
+                              specials=False)
+    q, s = F.mx_quantize_np(x, mx)
+    back = F.mx_dequantize_np(q, s, mx)
+    err = np.abs(back - x.astype(np.float64))
+    amax = np.abs(x).reshape(16, -1, mx.group).max(-1)
+    bound = np.repeat(amax, mx.group, 1) * 2.0 ** (-mx.elem.man_bits) * 1.01
+    assert (err <= bound).all()
+
+
+def test_oracle_nan_group_poisons_whole_group():
+    x = fuzz.group_structured(np.random.default_rng(23), 4, 96, 32)
+    q, s = F.mx_quantize_np(x, "mxfp4e2m1")
+    back = F.mx_dequantize_np(q, s, "mxfp4e2m1")
+    assert np.isnan(back[1, 32:64]).all()      # inf element's whole group
+    assert np.isnan(back[2, 64:]).all()        # NaN element's whole group
+    clean = np.isfinite(s)
+    assert np.isfinite(back.reshape(4, 3, 32)[clean]).all()
+
+
+# ------------------------------------------------- JAX scales == oracle ----
+
+@pytest.mark.parametrize("name", MX_NAMES)
+def test_compute_group_scales_matches_oracle(name):
+    mx = F.get_mx_format(name)
+    x = fuzz.group_structured(np.random.default_rng(24), 8, 256, mx.group,
+                              emax=20)
+    want = F.mx_group_scales_np(x, mx)
+    got = np.asarray(compute_group_scales(
+        jnp.asarray(x), mx.group, mx.elem.max_normal))
+    np.testing.assert_array_equal(got, want.astype(np.float32))
+    # nan_scale=False falls back to the f32-path neutral-scale convention
+    got2 = np.asarray(compute_group_scales(
+        jnp.asarray(x), mx.group, mx.elem.max_normal, nan_scale=False))
+    assert np.isfinite(got2).all()
+    np.testing.assert_array_equal(got2[np.isfinite(want)],
+                                  want[np.isfinite(want)].astype(np.float32))
+    assert (got2[~np.isfinite(want)] == 1.0).all()
+
+
+def test_apply_group_scales_exact_inverse():
+    x = jnp.asarray(fuzz.group_structured(np.random.default_rng(25), 4, 128,
+                                          32, specials=False))
+    s = compute_group_scales(x, 32, 240.0)
+    y = apply_group_scales(apply_group_scales(x, s, 32, inverse=True), s, 32)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(x))  # pow2 exact
+
+
+# ------------------------------------------- fused quantize kernel --------
+
+@pytest.mark.parametrize("name", MX_NAMES)
+@pytest.mark.parametrize("impl", ["pallas_interpret", "xla"])
+def test_mx_quantize_bit_exact_vs_oracle(name, impl):
+    """Arbitrary float data: quantization is elementwise after the group
+    amax, so kernel == numpy oracle bit for bit — including the all-zero
+    group (neutral scale), the inf group and the NaN group (E8M0 NaN
+    scale poisons exactly those groups)."""
+    mx = F.get_mx_format(name)
+    x = fuzz.group_structured(np.random.default_rng(26), 24, 160, mx.group)
+    qo, so = F.mx_quantize_np(x, mx)
+    q, s = ops.mx_quantize(jnp.asarray(x), name, impl=impl)
+    np.testing.assert_array_equal(np.asarray(s), so.astype(np.float32))
+    np.testing.assert_array_equal(np.asarray(q, np.float64), qo)
+
+
+def test_mx_quantize_ragged_and_batched():
+    """Non-multiple M pads inside the wrapper; leading dims are batch."""
+    x = jnp.asarray(fuzz.group_structured(np.random.default_rng(27), 10,
+                                          64, 32, specials=False))
+    q, s = ops.mx_quantize(x, "mxfp8e4m3", impl="pallas_interpret")
+    assert q.shape == (10, 64) and s.shape == (10, 2)
+    q2, s2 = ops.mx_quantize(x, "mxfp8e4m3", impl="xla")
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(q2))
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(s2))
+    x3 = jnp.stack([x, 2 * x])
+    q3, s3 = ops.mx_quantize(x3, "mxfp8e4m3", impl="pallas_interpret")
+    assert q3.shape == (2, 10, 64) and s3.shape == (2, 10, 2)
+    np.testing.assert_array_equal(np.asarray(q3[0]), np.asarray(q))
+    deq = np.asarray(ops.mx_dequantize(q3, s3, "mxfp8e4m3"))
+    np.testing.assert_array_equal(deq[1], 2 * deq[0])  # pow2 scaling exact
+
+
+# --------------------------------------------------- fused GEMM kernel ----
+
+def _exact_mx_operands(rng, m, k, n, mx, span=16, specials=True):
+    """Operands on which every fp32 intermediate is exact.
+
+    A: per-(row × group) pow2 magnitudes 2^U[-span/2, span/2] (the first
+    row is pinned to the full 2^span dynamic range) times small-int
+    grids, with each group's amax pinned to the largest power of two at
+    or below the element max (in (max/2, max], so the recovered E8M0
+    scale is exactly the chosen pow2).  One group is poisoned with
+    inf/NaN.  B: small ints, supported only on group ``j % G`` per
+    column ``j`` — every output element then accumulates 32 products
+    that share one scale class, so f32 sums are exact in any order.
+    """
+    g, G = mx.group, k // mx.group
+    pin = 2.0 ** math.floor(math.log2(mx.elem.max_normal))
+    ea = rng.integers(-span // 2, span // 2 + 1, (m, G)).astype(np.float64)
+    ea[0, 0], ea[0, 1] = -span // 2, span // 2
+    qa = rng.integers(-2, 3, (m, k)).astype(np.float64)
+    qa[:, ::g] = pin * np.sign(rng.integers(0, 2, (m, G)) * 2 - 1)
+    a = qa * np.repeat(2.0 ** ea, g, axis=1)
+    if specials:
+        a[1, g:2 * g] = np.inf
+        a[1, g + 3] = np.nan
+    b = np.zeros((k, n))
+    for j in range(n):
+        gj = j % G
+        b[gj * g:(gj + 1) * g, j] = rng.integers(-2, 3, g)
+    return a, b
+
+
+def _oracle_mx_gemm(a, b, mx_a, mx_b, out_fmt):
+    """numpy oracle: group-quantize both operands, dequantize exactly,
+    accumulate in f64 (== f32 when construction is exact), round once."""
+    qa, sa = F.mx_quantize_np(a, mx_a)
+    qbt, sbt = F.mx_quantize_np(np.asarray(b).T, mx_b)   # B groups along K
+    af = F.mx_dequantize_np(qa, sa, mx_a)
+    bf = F.mx_dequantize_np(qbt, sbt, mx_b).T
+    with np.errstate(all="ignore"):
+        acc = af @ bf
+    return F.quantize_np(acc, out_fmt)
+
+
+@pytest.mark.parametrize("name", MX_NAMES)
+@pytest.mark.parametrize("impl", ["pallas_interpret", "xla"])
+def test_mx_gemm_bit_exact_vs_oracle(name, impl):
+    """The acceptance-criteria workload: all five formats, per-group
+    dynamic range 2^16 inside one tile, a non-finite group, multiple
+    K-tiles of accumulation — kernel == oracle bit for bit (NaN rows
+    positionally equal)."""
+    mx = F.get_mx_format(name)
+    m, k, n = 16, 256, 48
+    a, b = _exact_mx_operands(np.random.default_rng(28), m, k, n, mx)
+    want = _oracle_mx_gemm(a, b, mx, mx, "fp32")
+    got = ops.mx_gemm(jnp.asarray(a, jnp.float32), jnp.asarray(b, jnp.float32),
+                      mx_a=name, impl=impl)
+    assert got.shape == (m, n)
+    np.testing.assert_array_equal(np.asarray(got, np.float64), want)
+    # the poisoned row is NaN (E8M0 NaN scale propagated), others finite
+    assert np.isnan(want[1]).all()
+    assert np.isfinite(np.delete(want, 1, axis=0)).all()
+
+
+def test_mx_gemm_mixed_formats_bit_exact():
+    """fwd-style E4M3 × bwd-style E5M2 pairing, bit-exact."""
+    mx_a, mx_b = F.MXFP8E4M3, F.MXFP8E5M2
+    a, b = _exact_mx_operands(np.random.default_rng(29), 8, 128, 24, mx_a,
+                              specials=False)
+    want = _oracle_mx_gemm(a, b, mx_a, mx_b, "fp16alt")
+    got = ops.mx_gemm(jnp.asarray(a, jnp.float32), jnp.asarray(b, jnp.float32),
+                      mx_a=mx_a, mx_b=mx_b, out_dtype=jnp.bfloat16,
+                      impl="pallas_interpret")
+    np.testing.assert_array_equal(np.asarray(got, np.float64), want)
+
+
+@pytest.mark.parametrize("shape", [(50, 96, 24), (16, 64, 8), (3, 20, 160, 40)],
+                         ids=str)
+def test_mx_gemm_ragged_and_batched_impls_agree(shape):
+    """Arbitrary float data + ragged/batched shapes: interpret-mode
+    kernel vs pure-jnp ref to f32 summation-order tolerance."""
+    *lead, m, k, n = shape
+    rng = np.random.default_rng(5)
+    a = jnp.asarray(rng.normal(0, 4, (*lead, m, k)), jnp.float32)
+    b = jnp.asarray(rng.normal(0, 4, (k, n)), jnp.float32)
+    o_p = ops.mx_gemm(a, b, mx_a="mxfp8e4m3", impl="pallas_interpret")
+    o_r = ops.mx_gemm(a, b, mx_a="mxfp8e4m3", impl="xla")
+    assert o_p.shape == (*lead, m, n)
+    tol = max(k * 2.0 ** -24, 1e-6)
+    np.testing.assert_allclose(np.asarray(o_p), np.asarray(o_r),
+                               rtol=tol, atol=tol * np.sqrt(k))
+
+
+def test_mx_gemm_batched_matches_flattened():
+    """MX scales are per-row: batching == flattening, bit for bit."""
+    rng = np.random.default_rng(6)
+    a = jnp.asarray(rng.normal(0, 2, (3, 16, 64)), jnp.float32)
+    b = jnp.asarray(rng.normal(0, 2, (64, 24)), jnp.float32)
+    y3 = ops.mx_gemm(a, b, mx_a="mxfp8e4m3", impl="xla")
+    y2 = ops.mx_gemm(a.reshape(-1, 64), b, mx_a="mxfp8e4m3", impl="xla")
+    np.testing.assert_array_equal(np.asarray(y3).reshape(-1, 24),
+                                  np.asarray(y2))
+
+
+# ------------------------------------------------ accuracy regression -----
+
+def test_group32_beats_per_tensor_gemm():
+    """Hot rows wreck per-tensor scaling on the *clean* rows (their
+    elements fall below the format's window and flush); MX group scales
+    are per-row by construction, so clean rows are untouched."""
+    from repro.kernels import ref
+    m, k, n = 128, 256, 64
+    rng = np.random.default_rng(8)
+    a = rng.normal(0, 1, (m, k))
+    a[:8] *= 2.0 ** 24                       # a few huge rows
+    a = jnp.asarray(a, jnp.float32)
+    b = jnp.asarray(rng.normal(0, 1, (k, n)), jnp.float32)
+    exact = np.asarray(a, np.float64) @ np.asarray(b, np.float64)
+
+    def row_nmse(out):
+        err = np.asarray(out, np.float64) - exact
+        pw = (exact ** 2).sum(1)
+        return float(np.mean((err ** 2).sum(1)[pw > 0] / pw[pw > 0]))
+
+    e_mx = row_nmse(ops.mx_gemm(a, b, mx_a="mxfp8e4m3", impl="xla"))
+    aq, sa = ops.quantize_tensor(a, jnp.float8_e4m3)
+    bq, sb = ops.quantize_tensor(b, jnp.float8_e4m3)
+    e_pt = row_nmse(ref.exsdotp_gemm_ref(aq, bq, sa * sb))
+    assert e_mx * 10 < e_pt, (e_mx, e_pt)
+
+
+def test_group32_beats_coarse_blocks_roundtrip():
+    """Granularity regression on the *operand*: one hot 32-group per
+    128×128 tile drags that whole tile's window up under 128×128 block
+    scaling (crushing the other 16352 elements), and the whole tensor's
+    under per-tensor scaling; group-32 confines the damage to the 32 hot
+    elements.  Measured as round-trip NMSE over the clean elements."""
+    m, k, g = 256, 256, 32
+    rng = np.random.default_rng(9)
+    x = rng.normal(0, 1, (m, k))
+    hot = np.zeros((m, k), bool)
+    for ti in range(m // 128):               # one hot group per 128×128 tile
+        for tj in range(k // 128):
+            i = 128 * ti + rng.integers(128)
+            j = 128 * tj + g * rng.integers(128 // g)
+            x[i, j:j + g] *= 2.0 ** 24
+            hot[i, j:j + g] = True
+    x = jnp.asarray(x, jnp.float32)
+    xe = np.asarray(x, np.float64)
+
+    def clean_nmse(back):
+        err = (np.asarray(back, np.float64) - xe)[~hot]
+        return float((err ** 2).sum() / (xe[~hot] ** 2).sum())
+
+    q, s = ops.mx_quantize(x, "mxfp8e4m3", impl="xla")
+    e_mx = clean_nmse(ops.mx_dequantize(q, s, "mxfp8e4m3"))
+    qb, sb = ops.quantize_blockwise(x, jnp.float8_e4m3, impl="xla")
+    e_blk = clean_nmse(ops.dequantize_blockwise(qb, sb))
+    qt, st = ops.quantize_tensor(x, jnp.float8_e4m3)
+    e_pt = clean_nmse(np.asarray(qt, np.float32) * float(st))
+    assert e_mx * 10 < e_blk, (e_mx, e_blk)
+    assert e_mx * 10 < e_pt, (e_mx, e_pt)
+    assert e_blk <= e_pt * 1.01, (e_blk, e_pt)
+
+
+# ------------------------------------------------ policy end-to-end -------
+
+def test_mxfp8_policy_wiring():
+    from repro.core.policy import get_policy
+    pol = get_policy("mxfp8")
+    assert pol.mx and pol.quantized
+    assert pol.mx_fwd == "mxfp8e4m3" and pol.mx_bwd_name == "mxfp8e5m2"
+    assert pol.block_cfg is None             # MX path, not block path
+    assert pol.loss_scaling                  # E5M2 grads are narrow-range
+
+
+def test_mxfp8_gated_off_explicit_tp_wire():
+    """MX policies must not take the explicit TP wire (its collectives
+    carry per-shard/per-block scales, not per-group E8M0 grids) — with
+    rules that pass every *other* tp_applicable gate, hfp8 routes TP but
+    mxfp8 must not."""
+    import types
+    from repro.core.policy import get_policy
+    from repro.parallel.tp_gemm import tp_applicable
+    mesh = types.SimpleNamespace(shape={"data": 2, "model": 4},
+                                 axis_names=("data", "model"))
+    rules = types.SimpleNamespace(mesh=mesh, seq_shard=True,
+                                  model_axis="model", model_size=4,
+                                  fsdp_axis="data", batch_axes=("data",))
+    x = jnp.zeros((2, 8, 16))
+    assert tp_applicable(x, rules, get_policy("hfp8")) is True
+    assert tp_applicable(x, rules, get_policy("hfp8_block")) is True
+    assert tp_applicable(x, rules, get_policy("mxfp8")) is False
+
+
+def test_qlinear_mxfp8_end_to_end():
+    """mxfp8 trains: fwd+bwd finite, close to per-tensor hfp8 on
+    well-scaled data, and much better on group-granular outliers."""
+    from repro.core.linear import qlinear
+    from repro.core.policy import get_policy
+    rng = np.random.default_rng(3)
+    pol_m = get_policy("mxfp8")
+    pol_t = get_policy("hfp8")
+    x = jnp.asarray(rng.normal(0, 1, (4, 64, 128)), jnp.bfloat16)
+    w = jnp.asarray(rng.normal(0, 0.3, (128, 64)), jnp.bfloat16)
+
+    def loss(pol):
+        def f(x, w):
+            return (qlinear(x, w, pol, impl="xla")
+                    .astype(jnp.float32) ** 2).sum()
+        return jax.jit(jax.value_and_grad(f, (0, 1)))
+
+    vm, gm = loss(pol_m)(x, w)
+    vt, _ = loss(pol_t)(x, w)
+    assert np.isfinite(float(vm))
+    assert all(bool(jnp.isfinite(g).all()) for g in gm)
+    assert abs(float(vm) - float(vt)) / abs(float(vt)) < 0.05
+    # outlier-heavy: one huge 64-token span wrecks per-tensor scaling
+    # (clean tokens flush below the window), not per-row-group MX
+    xo = np.asarray(x, np.float32)
+    xo[0] *= 2.0 ** 24
+    xo = jnp.asarray(xo, jnp.float32).astype(jnp.bfloat16)
+    exact = (np.asarray(xo, np.float64).reshape(-1, 128)
+             @ np.asarray(w, np.float64))
+    ym = np.asarray(qlinear(xo, w, pol_m, impl="xla"),
+                    np.float64).reshape(-1, 64)
+    yt = np.asarray(qlinear(xo, w, pol_t, impl="xla"),
+                    np.float64).reshape(-1, 64)
+    pw = (exact ** 2).sum(1)
+    nz = pw > 0
+    em = ((ym - exact) ** 2).sum(1)[nz] / pw[nz]
+    et = ((yt - exact) ** 2).sum(1)[nz] / pw[nz]
+    assert em.mean() * 10 < et.mean(), (em.mean(), et.mean())
+
+
+def test_mxfp8_nonfinite_reaches_loss_scale_skip():
+    """A poisoned activation under mxfp8 produces non-finite grads via
+    the E8M0 NaN scale, which check_and_update_scale refuses to apply."""
+    from repro.core.linear import qlinear
+    from repro.core.policy import get_policy
+    from repro.core.scaling import check_and_update_scale, loss_scale_init
+    pol = get_policy("mxfp8")
+    rng = np.random.default_rng(30)
+    x = jnp.asarray(rng.normal(0, 1, (2, 32, 64)), jnp.bfloat16)
+    x = x.at[0, 0, 0].set(jnp.inf)
+    w = jnp.asarray(rng.normal(0, 0.3, (64, 16)), jnp.bfloat16)
+    g = jax.grad(lambda x, w: (qlinear(x, w, pol, impl="xla")
+                               .astype(jnp.float32) ** 2).sum(),
+                 argnums=1)(x, w)
+    assert not bool(jnp.isfinite(g).all())
+    state = loss_scale_init()
+    _, new_state, skip = check_and_update_scale(state, {"w": g})
+    assert bool(skip)
+    assert float(new_state["scale"]) < float(state["scale"])

@@ -1,0 +1,128 @@
+"""Dynamic loss scaling: growth/skip/cap dynamics of the global scalar
+scheme and the per-block (per-row-tile) variant (DESIGN.md §7/§8).
+
+Previously only the skip path was exercised indirectly; here the full
+state machine is stepped: growth exactly at the growth_interval
+boundary, backoff with the 1.0 floor, the max_scale cap, and — for the
+per-block state — independence of the tiles (one diverging block backs
+off alone while its neighbours keep growing).
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.scaling import (block_loss_scale_init,
+                                check_and_update_block_scales,
+                                check_and_update_scale, loss_scale_init)
+
+
+def _step(state, g, **kw):
+    return check_and_update_scale(state, {"g": jnp.asarray(g, jnp.float32)},
+                                  **kw)
+
+
+def test_unscale_divides_by_current_scale():
+    state = loss_scale_init(initial=2.0 ** 4)
+    g = np.full((4,), 32.0, np.float32)
+    unscaled, _, skip = _step(state, g)
+    assert not bool(skip)
+    np.testing.assert_array_equal(np.asarray(unscaled["g"]), g / 16.0)
+
+
+def test_growth_exactly_at_interval_boundary():
+    state = loss_scale_init(initial=4.0)
+    g = np.ones((2,), np.float32)
+    for i in range(5):
+        _, state, skip = _step(state, g, growth_interval=3)
+        if i < 2:       # steps 1..2: counting up, no growth yet
+            assert float(state["scale"]) == 4.0
+            assert int(state["good_steps"]) == i + 1
+        elif i == 2:    # step 3 == growth_interval: double, reset counter
+            assert float(state["scale"]) == 8.0
+            assert int(state["good_steps"]) == 0
+        assert not bool(skip)
+    assert float(state["scale"]) == 8.0  # next window not complete yet
+
+
+def test_backoff_halves_resets_and_floors_at_one():
+    state = loss_scale_init(initial=4.0)
+    _, state, _ = _step(state, np.ones(2, np.float32), growth_interval=3)
+    assert int(state["good_steps"]) == 1
+    bad = np.asarray([1.0, np.inf], np.float32)
+    for want in (2.0, 1.0, 1.0, 1.0):  # halve, halve, then floor at 1.0
+        _, state, skip = _step(state, bad)
+        assert bool(skip)
+        assert float(state["scale"]) == want
+        assert int(state["good_steps"]) == 0  # counter reset on skip
+    # NaN triggers the same path as inf
+    _, state, skip = _step(state, np.asarray([np.nan], np.float32))
+    assert bool(skip) and float(state["scale"]) == 1.0
+
+
+def test_growth_caps_at_max_scale():
+    state = loss_scale_init(initial=2.0 ** 23)
+    g = np.ones((2,), np.float32)
+    for _ in range(4):
+        _, state, _ = _step(state, g, growth_interval=1,
+                            max_scale=2.0 ** 24)
+    assert float(state["scale"]) == 2.0 ** 24  # capped, not 2^27
+
+
+# --------------------------------------------------------- per-block ------
+
+def test_block_state_init():
+    state = block_loss_scale_init(4, initial=2.0 ** 10)
+    assert state["scale"].shape == (4,) and state["good_steps"].shape == (4,)
+    np.testing.assert_array_equal(np.asarray(state["scale"]),
+                                  np.full(4, 2.0 ** 10, np.float32))
+
+
+def test_block_skip_confined_to_poisoned_tile():
+    """One diverging row tile backs off alone; clean tiles keep growing
+    through their own schedule — the whole point of per-block state."""
+    state = block_loss_scale_init(4, initial=8.0)
+    g = np.ones((8, 3), np.float32)      # 4 tiles × 2 rows
+    g[5, 1] = np.inf                     # poison tile 2 only
+    unscaled, state, skip = check_and_update_block_scales(
+        state, jnp.asarray(g), growth_interval=1)
+    np.testing.assert_array_equal(np.asarray(skip),
+                                  [False, False, True, False])
+    np.testing.assert_array_equal(np.asarray(state["scale"]),
+                                  [16.0, 16.0, 4.0, 16.0])
+    np.testing.assert_array_equal(np.asarray(state["good_steps"]),
+                                  [0, 0, 0, 0])
+    # unscaled divides each tile by ITS scale (the pre-update one)
+    u = np.asarray(unscaled)
+    np.testing.assert_array_equal(u[:2], g[:2] / 8.0)
+    np.testing.assert_array_equal(u[6:], g[6:] / 8.0)
+    assert np.isinf(u[5, 1])             # poison survives unscaling
+
+
+def test_block_growth_boundary_floor_and_cap():
+    state = block_loss_scale_init(2, initial=4.0)
+    bad = np.ones((4, 2), np.float32)
+    bad[0, 0] = np.nan                   # tile 0 permanently poisoned
+    for _ in range(4):
+        _, state, skip = check_and_update_block_scales(
+            state, jnp.asarray(bad), growth_interval=2, max_scale=16.0)
+        np.testing.assert_array_equal(np.asarray(skip), [True, False])
+    # tile 0: 4 -> 2 -> 1 -> floor 1; tile 1: grew at steps 2 and 4
+    np.testing.assert_array_equal(np.asarray(state["scale"]), [1.0, 16.0])
+    for _ in range(4):
+        _, state, _ = check_and_update_block_scales(
+            state, jnp.asarray(bad), growth_interval=2, max_scale=16.0)
+    assert float(state["scale"][1]) == 16.0  # capped
+
+
+def test_block_skip_any_composes_with_global_logic():
+    """skip.any() reproduces the scalar scheme's step-skip decision."""
+    state = block_loss_scale_init(2)
+    g = np.ones((4, 2), np.float32)
+    _, _, skip = check_and_update_block_scales(state, jnp.asarray(g))
+    assert not bool(skip.any())
+    g[3, 0] = np.inf
+    _, _, skip = check_and_update_block_scales(state, jnp.asarray(g))
+    assert bool(skip.any())
+    scalar_state = loss_scale_init()
+    _, _, scalar_skip = check_and_update_scale(
+        scalar_state, {"g": jnp.asarray(g)})
+    assert bool(skip.any()) == bool(scalar_skip)
