@@ -96,6 +96,16 @@ def main() -> None:
     blockscale_gemm.throughput(quick)
     blockscale_gemm.tp_sweep(quick)  # skips unless >= 8 (forced) devices
     print("=" * 72)
+    print("## Wire bytes per policy across the explicit TP wire (§9)")
+    import jax
+    if len(jax.devices()) >= 8:
+        import json
+        from benchmarks import wire_bytes
+        print(json.dumps(wire_bytes.measure(quick), indent=2, sort_keys=True))
+    else:
+        print("(skipped: needs 8 forced host devices; "
+              "run python -m benchmarks.wire_bytes)")
+    print("=" * 72)
     print("## Roofline (from dry-run artifacts, if present)")
     import os
     if any(os.path.isdir(d) and os.listdir(d) for d in

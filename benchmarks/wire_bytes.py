@@ -1,0 +1,159 @@
+"""Wire bytes + accuracy per policy across the explicit TP wire.
+
+For each quantized policy (``hfp8`` per-tensor scales, ``hfp8_block``
+f32 scale grids, ``mxfp8`` fp8 payloads + packed E8M0 byte grids —
+DESIGN.md §9), the fwd+bwd column-parallel TP GEMM is compiled on a
+forced (data=2, model=4) host mesh and its optimized HLO is fed through
+``launch/hlo_analysis`` — the same trip-count-weighted collective-byte
+accounting the dry-run cells use, now with fractional sub-byte element
+sizes.  Reported per policy: total collective wire bytes, the per-type
+breakdown, and forward accuracy (row-normalized MSE vs an f64 oracle)
+on group-granular outlier data.
+
+A second section reports the packed sub-byte storage layer
+(``kernels/pack.py``): payload bytes and elements/byte for every MX
+format — FP4 must measure 2 elements per byte, FP6 four per three.
+
+This doubles as CI's wire-byte regression gate: ``--check BASELINE``
+fails (exit 1) if any policy's wire bytes regress >10% over the
+committed baseline (``benchmarks/baselines/wire_bytes.json``).
+
+Run:
+    PYTHONPATH=src python -m benchmarks.wire_bytes [--quick]
+        [--out BENCH_wire.json] [--check benchmarks/baselines/wire_bytes.json]
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def measure(quick=False):
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.compat import make_mesh, set_mesh
+    from repro.core.formats import MX_FORMATS
+    from repro.core.policy import get_policy
+    from repro.kernels import ops
+    from repro.launch.hlo_analysis import analyze
+    from repro.parallel.sharding import make_rules
+    from repro.parallel.tp_gemm import tp_column_linear
+
+    assert len(jax.devices()) >= 8, "run via __main__ (forces 8 devices)"
+    mesh = make_mesh((2, 4), ("data", "model"))
+    rules = make_rules(mesh, seq_shard=True)
+    b, s, k, n = (4, 32, 64, 128) if quick else (4, 64, 256, 256)
+    rng = np.random.default_rng(0)
+
+    # group-granular outliers: one hot 32-span per row — the regime
+    # per-tensor scaling flushes and MX groups resolve
+    x = rng.normal(0, 1, (b, s, k))
+    for i in range(b * s // 4):
+        bi, si = rng.integers(b), rng.integers(s)
+        j = 32 * rng.integers(k // 32)
+        x[bi, si, j:j + 32] *= 2.0 ** 16
+    w = rng.normal(0, 0.3, (k, n))
+    xj = jnp.asarray(x, jnp.bfloat16)
+    wj = jnp.asarray(w, jnp.bfloat16)
+    exact = (np.asarray(xj, np.float64).reshape(-1, k)
+             @ np.asarray(wj, np.float64))
+
+    report = {"shape": {"B": b, "S": s, "K": k, "N": n,
+                        "mesh": "data=2,model=4"},
+              "policies": {}}
+    for pname in ("hfp8", "hfp8_block", "mxfp8"):
+        pol = get_policy(pname)
+
+        def loss(x, w):
+            return (tp_column_linear(x, w, pol, rules)
+                    .astype(jnp.float32) ** 2).sum()
+
+        with set_mesh(mesh):
+            fn = jax.jit(jax.value_and_grad(loss, (0, 1)))
+            hlo = fn.lower(xj, wj).compile().as_text()
+            y = jax.jit(lambda x, w: tp_column_linear(x, w, pol, rules))(
+                xj, wj)
+        res = analyze(hlo)
+        err = np.asarray(y, np.float64).reshape(-1, n) - exact
+        pw = (exact ** 2).sum(1)
+        nz = pw > 0
+        nmse = float(np.mean((err ** 2).sum(1)[nz] / pw[nz]))
+        report["policies"][pname] = {
+            "coll_total": res["coll_total"],
+            "coll_bytes": {t: v for t, v in res["coll_bytes"].items() if v},
+            "nmse": nmse,
+        }
+
+    # packed storage: the honest bytes-per-element table
+    report["packed"] = {}
+    xq = jnp.asarray(rng.normal(0, 1, (s, k)), jnp.float32)
+    for name, mx in MX_FORMATS.items():
+        p, s8 = ops.mx_quantize(xq, name, impl="xla", packed=True)
+        elems = s * k
+        report["packed"][name] = {
+            "elements": elems,
+            "payload_bytes": int(np.prod(p.shape)),
+            "scale_bytes": int(np.prod(s8.shape)),
+            "elems_per_payload_byte": elems / int(np.prod(p.shape)),
+            "bytes_per_element": (int(np.prod(p.shape))
+                                  + int(np.prod(s8.shape))) / elems,
+        }
+    return report
+
+
+def check(report, baseline_path, tol=1.10):
+    """>10% wire-byte regression vs the committed baseline fails."""
+    with open(baseline_path) as f:
+        base = json.load(f)
+    failed = []
+    for pname, rec in report["policies"].items():
+        b = base.get("policies", {}).get(pname)
+        if b is None:
+            continue
+        ratio = rec["coll_total"] / max(b["coll_total"], 1.0)
+        status = "OK" if ratio <= tol else "REGRESSED"
+        print(f"wire-bytes {pname}: {rec['coll_total']:.0f} vs baseline "
+              f"{b['coll_total']:.0f} ({ratio:.3f}x) {status}")
+        if ratio > tol:
+            failed.append(pname)
+    for name, rec in report["packed"].items():
+        b = base.get("packed", {}).get(name)
+        if b and rec["elems_per_payload_byte"] < b["elems_per_payload_byte"]:
+            print(f"packed {name}: {rec['elems_per_payload_byte']} "
+                  f"elems/byte < baseline {b['elems_per_payload_byte']}")
+            failed.append(name)
+    return failed
+
+
+def main():
+    import os
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "host_platform_device_count" not in flags:
+        # must happen before the first jax import (measure imports lazily)
+        os.environ["XLA_FLAGS"] = (
+            flags + " --xla_force_host_platform_device_count=8").strip()
+    args = sys.argv[1:]
+
+    def opt(name, default=None):
+        if name in args:
+            return args[args.index(name) + 1]
+        return default
+
+    report = measure(quick="--quick" in args)
+    out = opt("--out", "BENCH_wire.json")
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    print(json.dumps(report, indent=2, sort_keys=True))
+    baseline = opt("--check")
+    if baseline:
+        failed = check(report, baseline)
+        if failed:
+            print(f"wire-byte regression gate FAILED: {failed}")
+            raise SystemExit(1)
+        print("wire-byte regression gate passed")
+
+
+if __name__ == "__main__":
+    main()

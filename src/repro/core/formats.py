@@ -29,10 +29,11 @@ __all__ = [
     "FP8", "FP8ALT", "FP16", "FP16ALT", "FP32", "FP64",
     "FP6E2M3", "FP6E3M2", "FP4E2M1",
     "FORMATS", "get_format", "quantize", "quantize_np",
-    "encode_np", "decode_np",
+    "encode_np", "decode_np", "encode", "decode",
     "MXFormat", "MXFP8E4M3", "MXFP8E5M2", "MXFP6E2M3", "MXFP6E3M2",
     "MXFP4E2M1", "MX_FORMATS", "get_mx_format",
     "E8M0_BIAS", "E8M0_NAN", "e8m0_encode_np", "e8m0_decode_np",
+    "e8m0_encode", "e8m0_decode",
     "mx_group_scales_np", "mx_quantize_np", "mx_dequantize_np",
 ]
 
@@ -123,6 +124,27 @@ class MiniFloatFormat:
         if md is not None:
             return md
         return np.dtype(f"uint{max(8, 1 << (self.width - 1).bit_length())}")
+
+    # ---- packed sub-byte storage (DESIGN.md §9) ---------------------
+    @property
+    def packed_bytes_per_element(self) -> float:
+        """Bytes per element in *packed* storage: ``width / 8``.
+
+        Sub-byte formats pack densely (FP4: two elements per byte, FP6:
+        four elements in three bytes — ``kernels/pack.py``), so the
+        honest byte accounting is fractional.
+        """
+        return self.width / 8
+
+    @property
+    def pack_align(self) -> int:
+        """Element-count multiple a packed run must be: the smallest n
+        with ``n * width`` a whole number of bytes (FP4 → 2, FP6 → 4,
+        byte-multiples → 1)."""
+        n = 1
+        while (n * self.width) % 8:
+            n += 1
+        return n
 
     def __str__(self) -> str:  # pragma: no cover - cosmetic
         return f"{self.name}(E{self.exp_bits}M{self.man_bits})"
@@ -321,6 +343,80 @@ def decode_np(bits: np.ndarray, fmt) -> np.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# Bit-pattern encode/decode (JAX; width <= 8). The jit-safe mirror of
+# encode_np/decode_np, used by the packed sub-byte storage layer
+# (kernels/pack.py): values <-> uint8 codes, then codes pack densely.
+# ---------------------------------------------------------------------------
+
+def encode(x: jax.Array, fmt) -> jax.Array:
+    """Encode values to ``fmt`` bit patterns (uint8 codes; width <= 8).
+
+    ``x`` is quantized to the representable set first, so arbitrary f32
+    input is accepted; on already-representable values the cast is
+    exact.  Bit-identical to ``encode_np``.
+    """
+    fmt = get_format(fmt)
+    assert fmt.width <= 8, fmt
+    q = _quantize_f32(jnp.asarray(x, jnp.float32), fmt)
+    bits = jax.lax.bitcast_convert_type(q, jnp.uint32)
+    aq = jnp.abs(q)
+    nan = jnp.isnan(q)
+    inf = jnp.isinf(q)
+    # encode_np canonicalizes NaN to +nan (quantize_np); XLA keeps the
+    # input NaN's sign bit, so drop it here to stay bit-identical
+    sign = jnp.where(nan, 0, bits >> 31).astype(jnp.uint32)
+    sub = (aq < jnp.float32(fmt.min_normal)) & ~nan  # includes zero
+    # q is representable in fmt, hence f32-normal (or zero) for width<=8:
+    # the fields fall straight out of the f32 bit pattern
+    e = ((bits >> 23) & jnp.uint32(0xFF)).astype(jnp.int32) - 127
+    man_norm = ((bits & jnp.uint32(0x7FFFFF))
+                >> (23 - fmt.man_bits)).astype(jnp.uint32)
+    exp_norm = jnp.clip(e + fmt.bias, 0, (1 << fmt.exp_bits) - 1)
+    # subnormals (and zero): value = man * min_subnormal, exact pow2 ratio
+    man_sub = jnp.round(
+        aq * _exact_pow2(jnp.full(q.shape, fmt.man_bits - fmt.min_exp,
+                                  jnp.int32))).astype(jnp.uint32)
+    exp_field = jnp.where(sub, 0, exp_norm).astype(jnp.uint32)
+    man_field = jnp.where(sub, man_sub, man_norm)
+    top = jnp.uint32((1 << fmt.exp_bits) - 1)
+    if fmt.ieee_specials:
+        exp_field = jnp.where(inf | nan, top, exp_field)
+        man_field = jnp.where(inf, 0, man_field)
+        man_field = jnp.where(nan, 1 << (fmt.man_bits - 1), man_field)
+    else:
+        # no special codes: quantize already clamped inf, NaN encodes to
+        # the max-magnitude pattern (the MX group scale carries the NaN)
+        exp_field = jnp.where(nan, top, exp_field)
+        man_field = jnp.where(nan, (1 << fmt.man_bits) - 1, man_field)
+    out = ((sign << (fmt.exp_bits + fmt.man_bits))
+           | (exp_field << fmt.man_bits) | man_field)
+    return out.astype(jnp.uint8)
+
+
+def decode(code: jax.Array, fmt) -> jax.Array:
+    """Decode ``fmt`` bit patterns (uint8 codes) to f32 values.
+
+    Bit-identical to ``decode_np`` (and to ``quantize``'s value set).
+    """
+    fmt = get_format(fmt)
+    assert fmt.width <= 8, fmt
+    c = jnp.asarray(code).astype(jnp.int32)
+    sign = (c >> (fmt.exp_bits + fmt.man_bits)) & 1
+    exp_f = (c >> fmt.man_bits) & ((1 << fmt.exp_bits) - 1)
+    man_f = c & ((1 << fmt.man_bits) - 1)
+    # exact in f32: mantissa fits, exponents are normal-range
+    val_norm = ((1.0 + man_f.astype(jnp.float32) * (2.0 ** -fmt.man_bits))
+                * _exact_pow2(exp_f - fmt.bias))
+    val_sub = man_f.astype(jnp.float32) * jnp.float32(fmt.min_subnormal)
+    val = jnp.where(exp_f == 0, val_sub, val_norm)
+    if fmt.ieee_specials:
+        sp = exp_f == (1 << fmt.exp_bits) - 1
+        val = jnp.where(sp & (man_f == 0), jnp.float32(jnp.inf), val)
+        val = jnp.where(sp & (man_f != 0), jnp.float32(jnp.nan), val)
+    return jnp.where(sign == 1, -val, val)
+
+
+# ---------------------------------------------------------------------------
 # MX formats: element format × E8M0 shared scale × group size (DESIGN.md §8)
 # ---------------------------------------------------------------------------
 
@@ -348,6 +444,13 @@ class MXFormat:
     def bits_per_element(self) -> float:
         """Storage cost incl. the amortized shared scale."""
         return self.elem.width + 8 / self.group
+
+    @property
+    def packed_bytes_per_element(self) -> float:
+        """Bytes per element in packed storage, incl. the amortized E8M0
+        byte (one uint8 per ``group`` elements): the wire/HBM cost the
+        packed payload layer (``kernels/pack.py``) actually realizes."""
+        return self.elem.packed_bytes_per_element + 1.0 / self.group
 
     def __str__(self) -> str:  # pragma: no cover - cosmetic
         return f"{self.name}({self.elem.name}xg{self.group})"
@@ -389,6 +492,25 @@ def e8m0_decode_np(code: np.ndarray) -> np.ndarray:
     code = np.asarray(code).astype(np.int64)
     val = np.ldexp(1.0, np.clip(code, 0, 254) - E8M0_BIAS)
     return np.where(code == E8M0_NAN, np.nan, val)
+
+
+def e8m0_encode(s: jax.Array) -> jax.Array:
+    """JAX mirror of ``e8m0_encode_np``: pow2 f32 scales (or NaN) to
+    E8M0 uint8 codes.  For a normal pow2 the code *is* the f32 biased
+    exponent field; NaN's all-ones exponent field is exactly the E8M0
+    NaN code (255), so the encode is a single bit extraction.  This is
+    what lets scale grids ride collectives at one byte per group.
+    """
+    bits = jax.lax.bitcast_convert_type(s.astype(jnp.float32), jnp.uint32)
+    return ((bits >> 23) & jnp.uint32(0xFF)).astype(jnp.uint8)
+
+
+def e8m0_decode(code: jax.Array) -> jax.Array:
+    """JAX mirror of ``e8m0_decode_np``: uint8 codes to f32 scales
+    (exact — pow2), code 255 to NaN."""
+    c = jnp.asarray(code).astype(jnp.int32)
+    val = _exact_pow2(jnp.clip(c, 0, 254) - E8M0_BIAS)
+    return jnp.where(c == E8M0_NAN, jnp.float32(jnp.nan), val)
 
 
 def _pow2_ceil_np(v: np.ndarray) -> np.ndarray:

@@ -29,6 +29,7 @@ import jax.numpy as jnp
 __all__ = ["loss_scale_init", "check_and_update_scale",
            "BlockScaleConfig", "compute_block_scales", "apply_block_scales",
            "compute_group_scales", "apply_group_scales",
+           "expand_group_scales",
            "block_loss_scale_init", "check_and_update_block_scales"]
 
 
@@ -171,12 +172,22 @@ def compute_group_scales(x: jax.Array, group: int, elem_max: float,
     return jnp.where(jnp.isfinite(amax), s, bad)
 
 
+def expand_group_scales(s: jax.Array, group: int) -> jax.Array:
+    """Broadcast per-group scales to element resolution along the last
+    axis: ``s[..., K/group] -> [..., K]``, each scale repeated over its
+    1×``group`` strip.  The single definition of the group layout —
+    the fused kernels, the jnp refs and the GEMM wrappers all expand
+    through here, so kernel/oracle bit-exactness can't silently
+    desynchronize on a layout change."""
+    return jnp.repeat(s, group, axis=-1)
+
+
 def apply_group_scales(x: jax.Array, s: jax.Array, group: int,
                        *, inverse: bool = False) -> jax.Array:
     """Broadcast per-group scales over ``x[..., K]``: ``x * s`` per
     ``group``-element strip (``inverse=True`` divides — the quantize
     direction).  Exact for pow2 scales."""
-    se = jnp.repeat(s, group, axis=-1).reshape(x.shape)
+    se = expand_group_scales(s, group).reshape(x.shape)
     return x / se if inverse else x * se
 
 

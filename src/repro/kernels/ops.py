@@ -16,9 +16,12 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from ..core.formats import get_mx_format
+from ..core.formats import decode, e8m0_decode, e8m0_encode, encode, \
+    get_mx_format
 from ..core.scaling import (BlockScaleConfig, apply_group_scales,
-                            compute_block_scales, compute_group_scales)
+                            compute_block_scales, compute_group_scales,
+                            expand_group_scales)
+from . import pack as packlib
 from . import ref
 from .blockscale_gemm import blockscale_gemm_pallas, mx_gemm_pallas
 from .exsdotp_gemm import exsdotp_gemm_pallas, default_blocks
@@ -27,6 +30,7 @@ from .quant import mx_quant_pallas, quant_blockwise_pallas
 __all__ = ["exsdotp_gemm", "blockscale_gemm", "blockscale_blocks",
            "quantize_tensor", "quantize_blockwise", "dequantize_blockwise",
            "mx_quantize", "mx_dequantize", "mx_gemm", "mx_blocks",
+           "mx_pack", "mx_unpack", "mx_gemm_packed",
            "resolve_impl"]
 
 
@@ -150,28 +154,88 @@ def mx_blocks(m: int, n: int, k: int, group: int) -> tuple[int, int, int]:
     return bm, bn, bk
 
 
-def mx_quantize(x: jax.Array, mx, *, impl: str = "auto"):
+def mx_quantize(x: jax.Array, mx, *, impl: str = "auto",
+                packed: bool = False):
     """Per-group MX quantization of ``x[..., M, K]`` (DESIGN.md §8).
 
     Returns ``(q, scales)``: ``q[..., M, K]`` f32 element-format values
     of ``x / s`` and ``scales[..., M, K/group]`` E8M0 pow2 scales, with
     ``x ~= q * s`` broadcast per 1×group strip along K (exact rescale —
     pow2).  Groups never span rows, so leading dims are free batch dims.
+
+    With ``packed=True`` (DESIGN.md §9) the return is the *storage*
+    layout instead: ``(payload, scales)`` where ``payload`` is the
+    densely packed uint8 bit patterns (FP8: one byte per element, FP6:
+    three bytes per four, FP4: one byte per two) and ``scales`` the
+    E8M0 uint8 codes — the honest HBM/wire footprint.  The round-trip
+    through ``mx_unpack``/``e8m0_decode`` is lossless, so
+    ``mx_gemm_packed`` on packed operands is bit-identical to the
+    value-space path.
     """
     impl = resolve_impl(impl)
     mx = get_mx_format(mx)
     *lead, m, k = x.shape
     assert k % mx.group == 0, (k, mx.group)
     if impl == "xla":
-        return ref.mx_quant_ref(x, mx=mx)
-    bm, _, bk = mx_blocks(m, 1, k, mx.group)
-    xp = _pad_last2(x.astype(jnp.float32), bm, bk)
-    mp, kp = xp.shape[-2], xp.shape[-1]
-    q, s = mx_quant_pallas(xp.reshape(-1, kp), mx=mx, block_m=bm, block_k=bk,
-                           interpret=(impl == "pallas_interpret"))
-    q = q.reshape(*lead, mp, kp)[..., :m, :k]
-    s = s.reshape(*lead, mp, kp // mx.group)[..., :m, :k // mx.group]
+        q, s = ref.mx_quant_ref(x, mx=mx)
+    else:
+        bm, _, bk = mx_blocks(m, 1, k, mx.group)
+        xp = _pad_last2(x.astype(jnp.float32), bm, bk)
+        mp, kp = xp.shape[-2], xp.shape[-1]
+        q, s = mx_quant_pallas(xp.reshape(-1, kp), mx=mx, block_m=bm,
+                               block_k=bk,
+                               interpret=(impl == "pallas_interpret"))
+        q = q.reshape(*lead, mp, kp)[..., :m, :k]
+        s = s.reshape(*lead, mp, kp // mx.group)[..., :m, :k // mx.group]
+    if packed:
+        return mx_pack(q, mx), e8m0_encode(s)
     return q, s
+
+
+def mx_pack(q: jax.Array, mx) -> jax.Array:
+    """Pack MX element values ``q[..., K]`` (f32 carrier, already in the
+    element format's value set) into dense uint8 storage:
+    ``[..., K * width / 8]`` bytes.  K must be a multiple of the group
+    (guaranteed by ``mx_quantize``), which covers every pack alignment.
+    """
+    mx = get_mx_format(mx)
+    assert q.shape[-1] % mx.group == 0, (q.shape, mx.group)
+    return packlib.pack_codes(encode(q, mx.elem), mx.elem.width)
+
+
+def mx_unpack(p: jax.Array, mx) -> jax.Array:
+    """Unpack dense uint8 storage back to f32 element values
+    (``[..., K]`` with ``K = bytes * 8 / width``); exact inverse of
+    ``mx_pack`` for every representable value."""
+    mx = get_mx_format(mx)
+    return decode(packlib.unpack_codes(p, mx.elem.width), mx.elem)
+
+
+def mx_gemm_packed(ap: jax.Array, sa8: jax.Array, bp: jax.Array,
+                   sb8: jax.Array, *, mx_a, mx_b=None,
+                   out_dtype=jnp.float32) -> jax.Array:
+    """Expanding GEMM straight from packed MX storage (DESIGN.md §9).
+
+    ``(ap, sa8)`` is ``mx_quantize(a[..., M, K], packed=True)``;
+    ``(bp, sb8)`` is ``mx_quantize(b.T, packed=True)`` — B's groups run
+    along K down each column, so its packed payload is stored
+    transposed.  Unpack → exact pow2 dequant (E8M0 codes) → f32
+    accumulation → one rounding: bit-identical to
+    ``ops.mx_gemm(a, b, impl='xla')`` on the same operands, because the
+    pack/unpack round-trip is lossless and the math after it is the
+    same.  The payloads never exist at more than ``width/8`` bytes per
+    element outside the f32 compute window — this is the memory model
+    the wire-byte benchmark measures.
+    """
+    mx_a = get_mx_format(mx_a)
+    mx_b = mx_a if mx_b is None else get_mx_format(mx_b)
+    g = mx_a.group
+    assert mx_b.group == g, (mx_a.name, mx_b.name)
+    af = apply_group_scales(mx_unpack(ap, mx_a), e8m0_decode(sa8), g)
+    bf = apply_group_scales(mx_unpack(bp, mx_b), e8m0_decode(sb8), g).T
+    acc = jnp.einsum("...mk,kn->...mn", af, bf,
+                     preferred_element_type=jnp.float32)
+    return acc.astype(out_dtype)
 
 
 def mx_dequantize(q: jax.Array, s: jax.Array, mx) -> jax.Array:
@@ -210,9 +274,9 @@ def mx_gemm(a: jax.Array, b: jax.Array, *, mx_a, mx_b=None,
         mp, kp = a.shape[-2], a.shape[-1]
         # scales enter the kernel at element resolution (compact grids
         # would put a 4-lane axis on the scale tiles — compiled-TPU
-        # illegal); the repeat is exact, f32, emulation-path only
-        sae = jnp.repeat(sa.reshape(-1, sa.shape[-1]), g, axis=-1)
-        sbe = jnp.repeat(sb.T, g, axis=-1).T
+        # illegal); the expansion is exact, f32, emulation-path only
+        sae = expand_group_scales(sa.reshape(-1, sa.shape[-1]), g)
+        sbe = expand_group_scales(sb.T, g).T
         out = mx_gemm_pallas(
             a.reshape(-1, kp), b, sae, sbe,
             mx_a=mx_a, mx_b=mx_b, out_dtype=out_dtype,

@@ -25,7 +25,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from ..core.formats import _quantize_f32, get_mx_format
-from ..core.scaling import compute_group_scales
+from ..core.scaling import compute_group_scales, expand_group_scales
 from ._compat import CompilerParams
 
 __all__ = ["quant_blockwise_pallas", "mx_quant_pallas"]
@@ -104,7 +104,7 @@ def _mx_kernel(x_ref, q_ref, se_ref, *, fmt, group: int):
     x = x_ref[...].astype(jnp.float32)
     bm, bk = x.shape
     s = compute_group_scales(x, group, fmt.max_normal)
-    se = jnp.repeat(s, group, axis=-1).reshape(bm, bk)
+    se = expand_group_scales(s, group).reshape(bm, bk)
     q_ref[...] = _quantize_f32(x / se, fmt)
     se_ref[...] = se
 

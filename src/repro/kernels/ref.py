@@ -5,6 +5,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core.formats import get_mx_format, quantize
+from ..core.scaling import expand_group_scales
 
 __all__ = ["exsdotp_gemm_ref", "quant_blockwise_ref", "blockscale_gemm_ref",
            "mx_quant_ref", "mx_gemm_ref"]
@@ -101,7 +102,7 @@ def mx_gemm_ref(a: jax.Array, b: jax.Array, sa: jax.Array, sb: jax.Array,
     g = mx_a.group
 
     def deq_rows(x, s, fmt):  # groups along the last axis
-        se = jnp.repeat(s.astype(jnp.float32), g, axis=-1).reshape(x.shape)
+        se = expand_group_scales(s.astype(jnp.float32), g).reshape(x.shape)
         return quantize(x.astype(jnp.float32) / se, fmt) * se
 
     af = deq_rows(a, sa, mx_a.elem)

@@ -25,12 +25,18 @@ import re
 from collections import defaultdict
 from typing import List, Optional
 
+# Bytes per element.  Sub-byte dtypes are *fractional* (f4: two
+# elements per byte, f6: four per three bytes, s4/u4 nibbles) so that
+# byte accounting matches the packed storage layer (kernels/pack.py,
+# DESIGN.md §9) instead of over-reporting packed payloads 2x.
 DTYPE_BYTES = {
     "f64": 8, "f32": 4, "bf16": 2, "f16": 2,
     "f8e5m2": 1, "f8e4m3": 1, "f8e4m3fn": 1, "f8e3m4": 1,
     "f8e4m3b11fnuz": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1, "f8e8m0fnu": 1,
+    "f6e2m3fn": 0.75, "f6e3m2fn": 0.75, "f4e2m1fn": 0.5,
     "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
-    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1, "c64": 8, "c128": 16,
+    "s8": 1, "u8": 1, "s4": 0.5, "u4": 0.5, "s2": 0.25, "u2": 0.25,
+    "pred": 1, "c64": 8, "c128": 16,
 }
 
 _SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([\d,]*)\]")

@@ -26,11 +26,14 @@ def proj(x, w, b, policy, rules, impl, kind="plain", quantized=True):
     composes with sequence parallelism instead of falling back to a
     GSPMD reshard (DESIGN.md §3, "block scaling × TP/SP").
 
-    MX policies (``mxfp8`` — DESIGN.md §8) deliberately do NOT take the
-    explicit TP wire (``tp_applicable`` gates them off): its collectives
-    carry per-shard or per-block scales, not per-(row × 32-group) E8M0
-    grids.  They run the fused ``ops.mx_gemm`` under GSPMD instead,
-    which preserves MX numerics exactly under sharding."""
+    MX policies (``mxfp8`` — DESIGN.md §9) ride the same wire natively:
+    operands quantize per-(row × group-of-32) and the one-byte fp8
+    payloads ship with *packed E8M0 byte grids* riding along (one uint8
+    per group, ~1/32 of payload bytes), provided every contraction axis
+    the groups run along — K forward, the local N columns for dgrad,
+    the token axis for wgrad — tiles into whole groups; otherwise they
+    fall back to the GSPMD-sharded fused ``ops.mx_gemm``, which is
+    numerically identical either way."""
     ok = quantized and tp_applicable(x, rules, policy)
     if ok:
         tp = rules.model_size
@@ -44,6 +47,18 @@ def proj(x, w, b, policy, rules, impl, kind="plain", quantized=True):
                   and x.shape[2] % tp == 0)
         else:
             ok = False
+    if ok and getattr(policy, "mx_fwd", ""):
+        # group structure must survive the model-axis split: dgrad
+        # groups run along the local N columns (col) / the local
+        # feature slice (row)
+        from ..core.formats import get_mx_format
+        g = get_mx_format(policy.mx_fwd).group
+        if kind == "col":
+            ok = w.shape[0] % g == 0 and (w.shape[1] // tp) % g == 0
+        else:
+            # row: fwd groups along the local feature slice, dgrad
+            # groups along the full output dim K = w.shape[1]
+            ok = (x.shape[2] // tp) % g == 0 and w.shape[1] % g == 0
     if ok and kind == "col":
         y = tp_column_linear(x, w, policy, rules)
     elif ok and kind == "row":

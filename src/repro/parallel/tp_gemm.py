@@ -34,9 +34,11 @@ import jax.numpy as jnp
 from ..compat import shard_map
 from jax.sharding import PartitionSpec as P
 
+from ..core.formats import e8m0_decode, e8m0_encode, get_mx_format
 from ..core.policy import Policy
 from ..core.scaling import (BlockScaleConfig, apply_block_scales,
-                            compute_block_scales)
+                            apply_group_scales, compute_block_scales,
+                            compute_group_scales)
 
 __all__ = ["tp_column_linear", "tp_row_linear", "tp_applicable",
            "row_applicable", "make_fsdp_gather", "embed_lookup_ep",
@@ -93,7 +95,39 @@ def _deq_block(q, s, br, bc):
     return apply_block_scales(q.astype(jnp.float32), s, br, bc)
 
 
-def _a2a_sum(partial_f32, axis, n, dim, wire_dtype=jnp.bfloat16, cfg=None):
+# ------------------------------------------------------ MX wire (§9) ------
+# MX policies ride the wire natively: the fp8 payload ships in its real
+# one-byte dtype next to a *packed E8M0 byte grid* — one uint8 code per
+# group of 32 (~1/32 of payload bytes; vs 4-byte f32 scales, 4x less
+# scale traffic).  The receiver decodes the grid (exact — pow2) and
+# dequantizes per group *before* the f32 accumulation, so the per-group
+# ExSdotp structure of DESIGN.md §8 holds across chips.
+
+def _quant_mx(x, mx):
+    """MX-quantize ``x[..., K]`` for the wire: groups of ``mx.group``
+    along the last axis, E8M0 pow2 scales.  Returns ``(q, s8)`` — the
+    payload in the element format's native one-byte dtype (the cast is
+    bit-identical to the value-space ``formats.quantize``: every
+    ``x / s`` value RNE-rounds to the same representable set) and the
+    uint8 E8M0 codes.  A non-finite group gets the NaN scale (0xFF):
+    payload and decoded scale both read back NaN — the §8 poison
+    convention survives the byte grid.
+    """
+    xf = x.astype(jnp.float32)
+    s = compute_group_scales(xf, mx.group, mx.elem.max_normal)
+    q = apply_group_scales(xf, s, mx.group, inverse=True).astype(
+        mx.elem.ml_dtype)
+    return q, e8m0_encode(s)
+
+
+def _deq_mx(q, s8, group):
+    """Decode the E8M0 byte grid and rescale per group — exact (pow2),
+    at accumulator granularity like ``_deq_block``."""
+    return apply_group_scales(q.astype(jnp.float32), e8m0_decode(s8), group)
+
+
+def _a2a_sum(partial_f32, axis, n, dim, wire_dtype=jnp.bfloat16, cfg=None,
+             mx=None):
     """Ship narrow partials all-to-all along ``dim``, accumulate f32.
 
     With ``wire_dtype`` fp8 (§Perf D8), each source quantizes its partial
@@ -107,9 +141,34 @@ def _a2a_sum(partial_f32, axis, n, dim, wire_dtype=jnp.bfloat16, cfg=None):
     payload, and each receiver dequantizes per block before the f32 sum
     — the block-scaled subsystem's outlier robustness on the wire.
     Requires ``dim`` to be the row axis (ndim-2).
+
+    With ``mx`` (an ``MXFormat``, DESIGN.md §9), quantization is
+    per-(row × group-of-32) along the *last* axis: the one-byte payload
+    ships with its packed E8M0 byte grid (one uint8 per group, ~1/32 of
+    payload bytes), and each receiver decodes + dequantizes per group
+    before the f32 sum.  Falls back to the bf16 wire when the last axis
+    doesn't tile into whole groups, or — when ``dim`` is the last axis
+    itself — when the split doesn't land on group boundaries (the grid
+    must split with the payload).
     """
     sh = partial_f32.shape
     split = sh[dim] // n
+    if mx is not None and sh[-1] % mx.group == 0 and (
+            dim != partial_f32.ndim - 1 or split % mx.group == 0):
+        g = mx.group
+        q, s8 = _quant_mx(partial_f32, mx)
+        if dim == partial_f32.ndim - 1:
+            qp = q.reshape(*sh[:dim], n, split)
+            sp = s8.reshape(*sh[:-1], n, split // g)
+        else:
+            qp = q.reshape(*sh[:dim], n, split, *sh[dim + 1:])
+            sp = s8.reshape(*sh[:dim], n, split, *sh[dim + 1:-1],
+                            sh[-1] // g)
+        recv = jax.lax.all_to_all(qp, axis, split_axis=dim,
+                                  concat_axis=dim, tiled=True)
+        srecv = jax.lax.all_to_all(sp, axis, split_axis=dim,
+                                   concat_axis=dim, tiled=True)
+        return jnp.sum(_deq_mx(recv, srecv, g), axis=dim)
     if cfg is not None and jnp.dtype(wire_dtype).itemsize == 1:
         assert dim == partial_f32.ndim - 2, (dim, sh)
         br = _fit_block(split, cfg.block_m)
@@ -142,12 +201,13 @@ def _a2a_sum(partial_f32, axis, n, dim, wire_dtype=jnp.bfloat16, cfg=None):
     return jnp.sum(recv.astype(jnp.float32), axis=dim)
 
 
-def _grad_reduce_data(dw_f32, rules, dim: int = 0):
+def _grad_reduce_data(dw_f32, rules, dim: int = 0, mx=None):
     """ZeRO gradient reduction over the data axis: bf16 a2a + f32 local
     accumulation, landing FSDP-sharded on ``dim`` (matches the param
-    spec); plus an f32 psum over the pod axis when present."""
+    spec); plus an f32 psum over the pod axis when present.  With ``mx``
+    the a2a ships the fp8-payload + E8M0-byte-grid wire instead (§9)."""
     n = rules.mesh.shape[rules.fsdp_axis]
-    dw = _a2a_sum(dw_f32, rules.fsdp_axis, n, dim)
+    dw = _a2a_sum(dw_f32, rules.fsdp_axis, n, dim, mx=mx)
     if "pod" in rules.mesh.axis_names:
         dw = jax.lax.psum(dw, "pod")
     return dw
@@ -190,12 +250,21 @@ def tp_applicable(x, rules, policy: Policy) -> bool:
     if not getattr(policy, "quantized", False) or x.ndim != 3:
         return False
     if getattr(policy, "mx_fwd", ""):
-        # MX policies (DESIGN.md §8) stay on the GSPMD qlinear path: the
-        # explicit TP wire ships per-shard-tensor or per-block scales,
-        # not per-(row × 32-group) E8M0 grids — routing mxfp8 here would
-        # silently change its numerics.  GSPMD shards the fused MX GEMM
-        # instead (scales are per-row, so sharded leading dims survive).
-        return False
+        # MX policies ride the wire natively (DESIGN.md §9): fp8
+        # payloads + packed E8M0 byte grids on every collective —
+        # provided the group structure survives the sharding.  Groups
+        # run along contraction axes: K (fwd), N-shards (dgrad) and the
+        # token axis (wgrad), so the feature dim and the sequence dim
+        # must both tile into whole groups, and the element formats
+        # need native one-byte dtypes for the payload to ship narrow.
+        fwd = get_mx_format(policy.mx_fwd)
+        bwd = get_mx_format(policy.mx_bwd_name)
+        if fwd.group != bwd.group:
+            return False
+        if fwd.elem.ml_dtype is None or bwd.elem.ml_dtype is None:
+            return False
+        if x.shape[-1] % fwd.group or x.shape[1] % fwd.group:
+            return False
     if rules.fsdp_axis not in rules.mesh.axis_names:
         return False
     tp = rules.model_size
@@ -218,6 +287,8 @@ def tp_column_linear(x, w, policy: Policy, rules):
 
 
 def _tp_col_fwd(x, w, policy, rules):
+    if getattr(policy, "mx_fwd", ""):
+        return _tp_col_fwd_mx(x, w, policy, rules)
     if policy.block_cfg is not None:
         return _tp_col_fwd_block(x, w, policy, rules)
     ba, axis, tp = _axes(rules)
@@ -248,6 +319,8 @@ def _tp_col_fwd(x, w, policy, rules):
 
 
 def _tp_col_bwd(policy, rules, res, g):
+    if getattr(policy, "mx_fwd", ""):
+        return _tp_col_bwd_mx(policy, rules, res, g)
     if policy.block_cfg is not None:
         return _tp_col_bwd_block(policy, rules, res, g)
     ba, axis, tp = _axes(rules)
@@ -365,6 +438,105 @@ def _tp_col_bwd_block(policy, rules, res, g):
     return dx, dw
 
 
+def _tp_col_fwd_mx(x, w, policy, rules):
+    """Column-parallel forward, MX wire (DESIGN.md §9 = §8 × §4).
+
+    Each sequence shard MX-quantizes its activations per-(row ×
+    group-of-32-along-K) — exactly the single-device ``ops.mx_gemm``
+    granularity, since groups run along the unsharded K axis — and
+    all-gathers the one-byte payload over the model axis with the
+    packed E8M0 byte grid riding along (~1/32 of payload bytes).  The
+    receiver decodes + dequantizes per group (exact — pow2) and
+    contracts in f32: per-group ExSdotp across chips, numerically
+    identical to the GSPMD-sharded fused MX GEMM.
+    """
+    ba, axis, tp = _axes(rules)
+    mxf = get_mx_format(policy.mx_fwd)
+    g = mxf.group
+    if (w.shape[1] // tp) % g:
+        # dgrad groups run along the local N columns; tp_applicable
+        # can't see w, so direct callers fail fast here (proj() routes
+        # such shapes to the GSPMD fallback instead)
+        raise ValueError(
+            f"MX TP column GEMM needs N/tp divisible by the group: "
+            f"N={w.shape[1]}, tp={tp}, group={g}")
+    cd = policy.compute_dtype
+    manual = set(ba) | {axis, rules.fsdp_axis}
+
+    @functools.partial(
+        shard_map, mesh=rules.mesh,
+        in_specs=(P(ba, axis, None), P(rules.fsdp_axis, axis)),
+        out_specs=(P(ba, None, axis), P(ba, axis, None), P(ba, axis, None)),
+        axis_names=manual, check_vma=False)
+    def fwd(xl, wl):
+        wg = jax.lax.all_gather(wl, rules.fsdp_axis, axis=0, tiled=True)
+        xq, sx8 = _quant_mx(xl, mxf)                  # groups along K
+        wq, sw8 = _quant_mx(wg.T, mxf)                # w columns, along K
+        xg = jax.lax.all_gather(xq, axis, axis=1, tiled=True)   # fp8 wire
+        sg8 = jax.lax.all_gather(sx8, axis, axis=1, tiled=True)  # E8M0 bytes
+        y = jnp.einsum("bsk,kn->bsn",
+                       _deq_mx(xg, sg8, g),
+                       _deq_mx(wq, sw8, g).T,
+                       preferred_element_type=jnp.float32)
+        return y.astype(cd), xq, sx8
+
+    # residuals: local fp8 payload + its E8M0 byte grid (weights are
+    # cheap to re-quantize in bwd; activations are not)
+    y, xq, sx8 = fwd(x, w)
+    return y, (xq, sx8, w)
+
+
+def _tp_col_bwd_mx(policy, rules, res, g_ct):
+    """dgrad: grads and weights re-quantize per-group along the local N
+    columns (shard boundaries coincide with group boundaries — the
+    ``tp_applicable`` divisibility gate), partials ship over the MX
+    a2a wire.  wgrad: the fwd payload is re-gathered (fp8 + byte grid),
+    dequantized, and both operands re-quantize per-group along the
+    *token* axis — the single-device wgrad grouping — with the raw
+    local cotangent used for the grad operand (no double rounding on
+    g; x carries the one fwd rounding the narrow wire implies, exactly
+    like the per-tensor path).  The ZeRO data reduction ships the same
+    fp8 + E8M0 wire."""
+    ba, axis, tp = _axes(rules)
+    mxf = get_mx_format(policy.mx_fwd)
+    mxb = get_mx_format(policy.mx_bwd_name)
+    g = mxf.group
+    xq, sx8, w = res
+    cd = policy.compute_dtype
+    manual = set(ba) | {axis, rules.fsdp_axis}
+
+    @functools.partial(
+        shard_map, mesh=rules.mesh,
+        in_specs=(P(ba, axis, None), P(ba, axis, None),
+                  P(rules.fsdp_axis, axis), P(ba, None, axis)),
+        out_specs=(P(ba, axis, None), P(rules.fsdp_axis, axis)),
+        axis_names=manual, check_vma=False)
+    def bwd(xql, sx8l, wl, gl):
+        wg = jax.lax.all_gather(wl, rules.fsdp_axis, axis=0, tiled=True)
+        # dgrad: contract over the local N columns; groups along N
+        gq, sg8 = _quant_mx(gl, mxb)                  # [B, S, Nl], E5M2
+        wqn, swn8 = _quant_mx(wg, mxf)                # w rows, along Nl
+        gf = _deq_mx(gq, sg8, g)
+        dpart = jnp.einsum("bsn,kn->bsk", gf, _deq_mx(wqn, swn8, g),
+                           preferred_element_type=jnp.float32)
+        dx = _a2a_sum(dpart, axis, tp, 1, mx=mxb).astype(cd)
+        # wgrad: re-gather the fp8 payload + byte grid; both operands
+        # re-group along the contracted token axis
+        xg = jax.lax.all_gather(xql, axis, axis=1, tiled=True)
+        sxg8 = jax.lax.all_gather(sx8l, axis, axis=1, tiled=True)
+        xf = _deq_mx(xg, sxg8, g)                     # [B, S, K] f32
+        xqt, sxt8 = _quant_mx(xf.transpose(0, 2, 1), mxf)   # [B, K, S]
+        gqt, sgt8 = _quant_mx(gl.transpose(0, 2, 1), mxb)   # [B, Nl, S]
+        dwl = jnp.einsum("bks,bns->kn",
+                         _deq_mx(xqt, sxt8, g), _deq_mx(gqt, sgt8, g),
+                         preferred_element_type=jnp.float32)
+        dw = _grad_reduce_data(dwl, rules, mx=mxb).astype(cd)
+        return dx, dw
+
+    dx, dw = bwd(xq, sx8, w, g_ct)
+    return dx, dw
+
+
 tp_column_linear.defvjp(_tp_col_fwd, _tp_col_bwd)
 
 
@@ -377,6 +549,8 @@ def tp_row_linear(x, w, policy: Policy, rules):
 
 
 def _tp_row_fwd(x, w, policy, rules):
+    if getattr(policy, "mx_fwd", ""):
+        return _tp_row_fwd_mx(x, w, policy, rules)
     if policy.block_cfg is not None:
         return _tp_row_fwd_block(x, w, policy, rules)
     ba, axis, tp = _axes(rules)
@@ -406,6 +580,8 @@ def _tp_row_fwd(x, w, policy, rules):
 
 
 def _tp_row_bwd(policy, rules, res, g):
+    if getattr(policy, "mx_fwd", ""):
+        return _tp_row_bwd_mx(policy, rules, res, g)
     if policy.block_cfg is not None:
         return _tp_row_bwd_block(policy, rules, res, g)
     ba, axis, tp = _axes(rules)
@@ -510,6 +686,93 @@ def _tp_row_bwd_block(policy, rules, res, g):
         return dx, dw.astype(cd)
 
     dx, dw = bwd(xq, sx, w, g)
+    return dx, dw
+
+
+def _tp_row_fwd_mx(x, w, policy, rules):
+    """Row-parallel forward, MX wire: the contraction axis (features) is
+    model-sharded, so each shard quantizes per-(row × group) along its
+    local N slice — group boundaries coincide with shard boundaries
+    (the ``tp_applicable``/``proj`` divisibility gates) — contracts
+    locally in f32, and the partial products ship over the MX a2a wire
+    (fp8 payload + packed E8M0 byte grid, groups along K)."""
+    ba, axis, tp = _axes(rules)
+    mxf = get_mx_format(policy.mx_fwd)
+    g = mxf.group
+    if (x.shape[-1] // tp) % g or w.shape[1] % g:
+        # fwd groups run along the local feature slice, dgrad groups
+        # along the full output dim K; tp_applicable can't see w, so
+        # direct callers fail fast here (proj() routes such shapes to
+        # the GSPMD fallback instead)
+        raise ValueError(
+            f"MX TP row GEMM needs N/tp and K divisible by the group: "
+            f"N={x.shape[-1]}, K={w.shape[1]}, tp={tp}, group={g}")
+    cd = policy.compute_dtype
+    manual = set(ba) | {axis, rules.fsdp_axis}
+
+    @functools.partial(
+        shard_map, mesh=rules.mesh,
+        in_specs=(P(ba, None, axis), P(axis, rules.fsdp_axis)),
+        out_specs=(P(ba, axis, None), P(ba, None, axis), P(ba, None, axis)),
+        axis_names=manual, check_vma=False)
+    def fwd(xl, wl):
+        wg = jax.lax.all_gather(wl, rules.fsdp_axis, axis=1, tiled=True)
+        xq, sx8 = _quant_mx(xl, mxf)                  # groups along Nl
+        wq, sw8 = _quant_mx(wg.T, mxf)                # [K, Nl], along Nl
+        part = jnp.einsum("bsn,kn->bsk",
+                          _deq_mx(xq, sx8, g), _deq_mx(wq, sw8, g),
+                          preferred_element_type=jnp.float32)
+        y = _a2a_sum(part, axis, tp, 1, mx=mxf)
+        return y.astype(cd), xq, sx8
+
+    y, xq, sx8 = fwd(x, w)
+    return y, (xq, sx8, w)
+
+
+def _tp_row_bwd_mx(policy, rules, res, g_ct):
+    """dgrad: the local cotangent quantizes per-group along K and the
+    payload + byte grid gather over the model axis (full tokens); each
+    shard contracts the full K for its own N columns.  wgrad: both
+    operands re-group along the contracted token axis — x from its
+    fwd-quantized payload (one wire rounding), g from the gathered
+    wire payload (same one rounding the per-tensor path takes) — and
+    the ZeRO data reduction ships fp8 + E8M0 bytes, falling back to
+    bf16 only if the FSDP split breaks group alignment."""
+    ba, axis, tp = _axes(rules)
+    mxf = get_mx_format(policy.mx_fwd)
+    mxb = get_mx_format(policy.mx_bwd_name)
+    g = mxf.group
+    xq, sx8, w = res
+    cd = policy.compute_dtype
+    manual = set(ba) | {axis, rules.fsdp_axis}
+
+    @functools.partial(
+        shard_map, mesh=rules.mesh,
+        in_specs=(P(ba, None, axis), P(ba, None, axis),
+                  P(axis, rules.fsdp_axis), P(ba, axis, None)),
+        out_specs=(P(ba, None, axis), P(axis, rules.fsdp_axis)),
+        axis_names=manual, check_vma=False)
+    def bwd(xql, sx8l, wl, gl):
+        wg = jax.lax.all_gather(wl, rules.fsdp_axis, axis=1, tiled=True)
+        gq, sg8 = _quant_mx(gl, mxb)                  # [B, Sl, K], E5M2
+        gg = jax.lax.all_gather(gq, axis, axis=1, tiled=True)    # fp8 wire
+        sgg8 = jax.lax.all_gather(sg8, axis, axis=1, tiled=True)  # bytes
+        gf = _deq_mx(gg, sgg8, g)                     # [B, S, K] f32
+        wqk, swk8 = _quant_mx(wg, mxf)                # w rows, along K
+        dx = jnp.einsum("bsk,nk->bsn", gf, _deq_mx(wqk, swk8, g),
+                        preferred_element_type=jnp.float32).astype(cd)
+        # wgrad: re-group both operands along the contracted token axis
+        xf = _deq_mx(xql, sx8l, g)                    # [B, S, Nl] f32
+        xqt, sxt8 = _quant_mx(xf.transpose(0, 2, 1), mxf)   # [B, Nl, S]
+        gqt, sgt8 = _quant_mx(gf.transpose(0, 2, 1), mxb)   # [B, K, S]
+        dwl = jnp.einsum("bns,bks->nk",
+                         _deq_mx(xqt, sxt8, g), _deq_mx(gqt, sgt8, g),
+                         preferred_element_type=jnp.float32)
+        # ZeRO reduce over data lands on dim1 (w is [N_model, K_fsdp])
+        dw = _grad_reduce_data(dwl, rules, dim=1, mx=mxb)
+        return dx, dw.astype(cd)
+
+    dx, dw = bwd(xq, sx8, w, g_ct)
     return dx, dw
 
 

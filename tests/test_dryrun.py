@@ -87,6 +87,37 @@ def test_collective_parse_weighted():
     assert res["coll_counts"]["all-reduce"] == 5
 
 
+def test_fractional_subbyte_element_sizes():
+    """f4/f6 dtypes count at their packed width (2 elems/byte, 4 per 3
+    bytes — matching kernels/pack.py), not one byte each: a 64-element
+    f4 all-gather is 32 wire bytes, and the sizes agree with the format
+    system's own packed_bytes_per_element."""
+    from repro.core import formats as F
+    from repro.launch.hlo_analysis import DTYPE_BYTES
+    assert DTYPE_BYTES["f4e2m1fn"] == F.FP4E2M1.packed_bytes_per_element
+    assert DTYPE_BYTES["f6e2m3fn"] == F.FP6E2M3.packed_bytes_per_element
+    assert DTYPE_BYTES["f6e3m2fn"] == F.FP6E3M2.packed_bytes_per_element
+    assert DTYPE_BYTES["f8e5m2"] == F.FP8.packed_bytes_per_element
+    assert DTYPE_BYTES["u4"] == 0.5
+    hlo = textwrap.dedent("""\
+    HloModule m
+    ENTRY %main (x: f4e2m1fn[8,64]) -> f4e2m1fn[8,64] {
+      %x = f4e2m1fn[8,64]{1,0} parameter(0)
+      %y = f6e2m3fn[8,64]{1,0} convert(%x)
+      %ag = f6e2m3fn[8,64]{1,0} all-gather(%y), dimensions={0}
+      ROOT %o = f4e2m1fn[8,64]{1,0} convert(%ag)
+    }
+    """)
+    res = analyze(hlo)
+    # the f6 all-gather moves 8*64*0.75 bytes, not 8*64
+    assert res["coll_bytes"]["all-gather"] == 8 * 64 * 0.75
+    # bytes accessed: two converts (f4 side + f6 side each) plus the
+    # all-gather's operand + result, all at fractional element sizes
+    f4, f6 = 8 * 64 * 0.5, 8 * 64 * 0.75
+    want = (f4 + f6) * 2 + 2 * f6
+    assert res["bytes"] == want, (res["bytes"], want)
+
+
 def test_applicability_matrix():
     skips = []
     for name, cfg in ARCHS.items():

@@ -241,6 +241,93 @@ def test_block_tp_gemm_matches_block_qlinear():
     assert "BLOCKTP_OK" in out
 
 
+def test_mx_tp_gemm_bit_exact_vs_single_device():
+    """MX over the explicit TP wire (DESIGN.md §9): fwd/dgrad/wgrad of
+    the column- and row-parallel MX GEMMs are BIT-EXACT against the
+    single-device mxfp8 qlinear (ops.mx_gemm) on exact-arithmetic
+    operands — small-int activations, one-hot weight columns, a
+    2-token-support cotangent, so every quantize/dequant (including
+    the wire's own E8M0 re-grouping) and every f32 partial sum is
+    exact — and proj() routes mxfp8 onto the TP wire."""
+    out = _run(textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.compat import make_mesh, set_mesh
+        from repro.core.policy import get_policy
+        from repro.core.linear import qlinear
+        from repro.parallel.sharding import make_rules
+        from repro.parallel.tp_gemm import (tp_applicable, tp_column_linear,
+                                            tp_row_linear)
+        mesh = make_mesh((2, 4), ("data", "model"))
+        rules = make_rules(mesh, seq_shard=True)
+        pol = get_policy("mxfp8")
+        B, S, K, N = 4, 32, 64, 128
+        rng = np.random.default_rng(7)
+        x = rng.integers(-2, 3, (B, S, K)).astype(np.float32)
+        assert tp_applicable(jnp.asarray(x), rules, pol)
+        w = np.zeros((K, N), np.float32)
+        for n in range(N):
+            w[n % K, n] = rng.choice([-2.0, -1.0, 1.0, 2.0])
+        g = np.zeros((B, S, N), np.float32)
+        for (b, s) in [(0, 3), (2, 17)]:
+            g[b, s] = rng.choice([-1.0, 0.0, 1.0], N)
+
+        def check(tp_fn, x, w, g):
+            xj = jnp.asarray(x, jnp.bfloat16)
+            wj = jnp.asarray(w, jnp.bfloat16)
+            gj = jnp.asarray(g, jnp.bfloat16)
+            def tp(x, w):
+                with set_mesh(mesh):
+                    y, vjp = jax.vjp(
+                        lambda x, w: tp_fn(x, w, pol, rules), x, w)
+                    return (y,) + vjp(gj)
+            def sd(x, w):
+                y, vjp = jax.vjp(
+                    lambda x, w: qlinear(x, w, pol, impl="xla"), x, w)
+                return (y,) + vjp(gj)
+            got = jax.jit(tp)(xj, wj)
+            want = jax.jit(sd)(xj, wj)
+            for name, a, b in zip(("y", "dx", "dw"), got, want):
+                np.testing.assert_array_equal(
+                    np.asarray(a, np.float32), np.asarray(b, np.float32),
+                    err_msg=name)
+
+        check(tp_column_linear, x, w, g)
+
+        # row-parallel: one nonzero per weight column (injective map)
+        x2 = rng.integers(-2, 3, (B, S, N)).astype(np.float32)
+        w2 = np.zeros((N, K), np.float32)
+        perm = rng.permutation(N)[:K]
+        for k in range(K):
+            w2[perm[k], k] = rng.choice([-2.0, -1.0, 1.0, 2.0])
+        g2 = np.zeros((B, S, K), np.float32)
+        for (b, s) in [(1, 5), (3, 30)]:
+            g2[b, s] = rng.choice([-1.0, 0.0, 1.0], K)
+        check(tp_row_linear, x2, w2, g2)
+
+        # proj() routes mxfp8 onto the explicit TP wire
+        import repro.models.layers as L
+        hits = []
+        orig = L.tp_column_linear
+        def spy(*a, **k):
+            hits.append(1)
+            return orig(*a, **k)
+        L.tp_column_linear = spy
+        try:
+            with set_mesh(mesh):
+                y = jax.jit(lambda x, w: L.proj(
+                    x, w, None, pol, rules, "xla", kind="col"))(
+                    jnp.asarray(x, jnp.bfloat16), jnp.asarray(w, jnp.bfloat16))
+        finally:
+            L.tp_column_linear = orig
+        assert hits, "proj() did not route mxfp8 to the TP GEMM"
+        assert y.shape == (B, S, N)
+        print("MXTP_OK")
+    """))
+    assert "MXTP_OK" in out
+
+
 def test_moe_ep_matches_reference():
     """shard_map expert-parallel MoE == einsum dispatch reference."""
     out = _run(textwrap.dedent("""

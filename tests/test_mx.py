@@ -357,11 +357,12 @@ def test_mxfp8_policy_wiring():
     assert pol.loss_scaling                  # E5M2 grads are narrow-range
 
 
-def test_mxfp8_gated_off_explicit_tp_wire():
-    """MX policies must not take the explicit TP wire (its collectives
-    carry per-shard/per-block scales, not per-group E8M0 grids) — with
-    rules that pass every *other* tp_applicable gate, hfp8 routes TP but
-    mxfp8 must not."""
+def test_mxfp8_rides_explicit_tp_wire_when_groups_align():
+    """MX policies ride the explicit TP wire (DESIGN.md §9: fp8 payloads
+    + packed E8M0 byte grids on the collectives) — but only when the
+    group structure survives the sharding: the feature and sequence
+    dims must tile into whole groups of 32, else the GSPMD fused-GEMM
+    fallback keeps the numerics."""
     import types
     from repro.core.policy import get_policy
     from repro.parallel.tp_gemm import tp_applicable
@@ -373,7 +374,48 @@ def test_mxfp8_gated_off_explicit_tp_wire():
     x = jnp.zeros((2, 8, 16))
     assert tp_applicable(x, rules, get_policy("hfp8")) is True
     assert tp_applicable(x, rules, get_policy("hfp8_block")) is True
+    # K=16, S=8: groups of 32 don't tile -> GSPMD fallback
     assert tp_applicable(x, rules, get_policy("mxfp8")) is False
+    # group-aligned shapes take the wire
+    xa = jnp.zeros((2, 32, 64))
+    assert tp_applicable(xa, rules, get_policy("mxfp8")) is True
+    # sequence misaligned (wgrad groups run along tokens) -> fallback
+    assert tp_applicable(jnp.zeros((2, 16, 64)), rules,
+                         get_policy("mxfp8")) is False
+
+
+def test_mx_tp_misaligned_w_falls_back_not_crashes():
+    """tp_applicable can't see w, so shapes whose *weight* dims break
+    group alignment (N/tp for col dgrad, K for row dgrad) must route to
+    the GSPMD fallback in proj() — and fail fast with a clear error,
+    not a cryptic trace-time assert, when the TP GEMMs are called
+    directly."""
+    import types
+    import repro.models.layers as L
+    from repro.core.policy import get_policy
+    from repro.parallel.tp_gemm import (tp_applicable, tp_column_linear,
+                                        tp_row_linear)
+    mesh = types.SimpleNamespace(shape={"data": 2, "model": 4},
+                                 axis_names=("data", "model"))
+    rules = types.SimpleNamespace(mesh=mesh, seq_shard=True,
+                                  model_axis="model", model_size=4,
+                                  fsdp_axis="data", batch_axes=("data",))
+    pol = get_policy("mxfp8")
+    x = jnp.zeros((2, 32, 64), jnp.bfloat16)
+    assert tp_applicable(x, rules, pol)
+    # col with N/tp = 16 (not a whole group): proj takes the GSPMD path
+    w_bad = jnp.zeros((64, 64), jnp.bfloat16)
+    y = L.proj(x, w_bad, None, pol, rules, "xla", kind="col")
+    assert y.shape == (2, 32, 64)
+    with pytest.raises(ValueError, match="N/tp divisible"):
+        tp_column_linear(x, w_bad, pol, rules)
+    # row with K = 48 (not a whole group): same
+    xr = jnp.zeros((2, 32, 128), jnp.bfloat16)
+    wr_bad = jnp.zeros((128, 48), jnp.bfloat16)
+    y = L.proj(xr, wr_bad, None, pol, rules, "xla", kind="row")
+    assert y.shape == (2, 32, 48)
+    with pytest.raises(ValueError, match="divisible"):
+        tp_row_linear(xr, wr_bad, pol, rules)
 
 
 def test_qlinear_mxfp8_end_to_end():
