@@ -1,0 +1,120 @@
+"""Packed vs unpacked payload bytes + accuracy across MXFP8/6/4.
+
+Paper context: the MiniFloat-NN story (and the 575 GFLOPS/W headline)
+rests on operands staying narrow end to end; DESIGN.md §10's packed
+payload pipeline is that claim's memory model.  This sweep measures,
+per MX format:
+
+* **payload bytes** of the packed pipeline (``mx_quantize(packed=True)``
+  — what the Pallas kernels emit/consume) against the two unpacked
+  carriers the refactor removed: byte-wide uint8 codes (1 B/elem — the
+  PR 4 "pack at the XLA edge" storage model) and the f32 value carrier
+  (4 B/elem — the §8 emulation).  Expect 2x / 1.33x payload-byte
+  reduction for FP4 / FP6 vs byte-wide;
+* **accuracy**: row-normalized MSE of the packed-ref GEMM vs an f64
+  oracle on group-granular outlier data, plus bitwise equality between
+  the packed and value paths (packing is lossless);
+* a Pallas interpret-mode smoke proving the packed kernel path agrees
+  with the XLA reference.
+
+Run:
+    PYTHONPATH=src python -m benchmarks.mx_packed_sweep [--quick]
+"""
+from __future__ import annotations
+
+import sys
+
+
+def payload_bytes(quick=False):
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.formats import MX_FORMATS
+    from repro.kernels import ops
+
+    m, k = (64, 512) if quick else (256, 2048)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(0, 1, (m, k)), jnp.float32)
+    print("# packed vs unpacked payload bytes "
+          f"({m}x{k} = {m * k} elements)")
+    print("format,packed_payload_B,scale_B,packed_B_per_elem,"
+          "vs_u8_codes,vs_f32_carrier")
+    for name, mx in MX_FORMATS.items():
+        p, s8 = ops.mx_quantize(x, name, impl="xla", packed=True)
+        pb = int(np.prod(p.shape))
+        sb = int(np.prod(s8.shape))
+        elems = m * k
+        bpe = (pb + sb) / elems
+        print(f"{name},{pb},{sb},{bpe:.5f},"
+              f"{elems / pb:.3f}x,{4 * elems / pb:.3f}x")
+
+
+def accuracy(quick=False):
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.formats import MX_FORMATS
+    from repro.kernels import ops
+
+    m, k, n = (64, 256, 64) if quick else (128, 1024, 128)
+    rng = np.random.default_rng(1)
+    # group-granular outliers: the regime per-tensor scaling flushes
+    a = rng.normal(0, 1, (m, k))
+    for _ in range(m // 4):
+        i = rng.integers(m)
+        j = 32 * rng.integers(k // 32)
+        a[i, j:j + 32] *= 2.0 ** 16
+    b = rng.normal(0, 0.3, (k, n))
+    aj = jnp.asarray(a, jnp.float32)
+    bj = jnp.asarray(b, jnp.float32)
+    exact = a @ b
+    print("# packed-GEMM accuracy on group-granular outliers "
+          f"({m}x{k}x{n}); packed == value path bitwise")
+    print("format,row_nmse,bitwise_equal_to_value_path")
+    for name in MX_FORMATS:
+        want = ops.mx_gemm(aj, bj, mx_a=name, impl="xla")
+        ap, sa8 = ops.mx_quantize(aj, name, impl="xla", packed=True)
+        bp, sb8 = ops.mx_quantize(bj.T, name, impl="xla", packed=True)
+        got = np.asarray(ops.mx_gemm_packed(ap, sa8, bp, sb8, mx_a=name,
+                                            impl="xla"), np.float64)
+        err = got - exact
+        pw = (exact ** 2).sum(1)
+        nz = pw > 0
+        nmse = float(np.mean((err ** 2).sum(1)[nz] / pw[nz]))
+        same = bool(np.array_equal(got, np.asarray(want, np.float64)))
+        print(f"{name},{nmse:.3e},{same}")
+        assert same, f"{name}: packed path diverged from value path"
+
+
+def kernel_smoke():
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(2)
+    a = jnp.asarray(rng.integers(-2, 3, (16, 64)), jnp.float32)
+    b = jnp.asarray(rng.integers(-2, 3, (64, 24)), jnp.float32)
+    print("# Pallas interpret-mode packed kernels == XLA reference "
+          "(bit-exact small-int operands)")
+    for name in ("mxfp8e4m3", "mxfp6e2m3", "mxfp4e2m1"):
+        ap, sa8 = ops.mx_quantize(a, name, impl="pallas_interpret",
+                                  packed=True)
+        bp, sb8 = ops.mx_quantize(b.T, name, impl="pallas_interpret",
+                                  packed=True)
+        got = ops.mx_gemm_packed(ap, sa8, bp, sb8, mx_a=name,
+                                 impl="pallas_interpret")
+        want = ops.mx_gemm(a, b, mx_a=name, impl="xla")
+        ok = bool(np.array_equal(np.asarray(got), np.asarray(want)))
+        print(f"{name},pallas_interpret_bit_exact,{ok}")
+        assert ok, name
+
+
+def main(quick=False):
+    payload_bytes(quick)
+    accuracy(quick)
+    kernel_smoke()
+
+
+if __name__ == "__main__":
+    main("--quick" in sys.argv)

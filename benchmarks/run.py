@@ -96,6 +96,10 @@ def main() -> None:
     blockscale_gemm.throughput(quick)
     blockscale_gemm.tp_sweep(quick)  # skips unless >= 8 (forced) devices
     print("=" * 72)
+    print("## Packed payload pipeline: bytes + accuracy across MXFP8/6/4 (§10)")
+    from benchmarks import mx_packed_sweep
+    mx_packed_sweep.main(quick)
+    print("=" * 72)
     print("## Wire bytes per policy across the explicit TP wire (§9)")
     import jax
     if len(jax.devices()) >= 8:

@@ -1,8 +1,9 @@
 """Wire bytes + accuracy per policy across the explicit TP wire.
 
 For each quantized policy (``hfp8`` per-tensor scales, ``hfp8_block``
-f32 scale grids, ``mxfp8`` fp8 payloads + packed E8M0 byte grids —
-DESIGN.md §9), the fwd+bwd column-parallel TP GEMM is compiled on a
+f32 scale grids, ``mxfp8``/``mxfp6``/``mxfp4`` narrow payloads — native
+fp8 bytes or packed sub-byte codec lanes — + packed E8M0 byte grids —
+DESIGN.md §9/§10), the fwd+bwd column-parallel TP GEMM is compiled on a
 forced (data=2, model=4) host mesh and its optimized HLO is fed through
 ``launch/hlo_analysis`` — the same trip-count-weighted collective-byte
 accounting the dry-run cells use, now with fractional sub-byte element
@@ -11,12 +12,21 @@ breakdown, and forward accuracy (row-normalized MSE vs an f64 oracle)
 on group-granular outlier data.
 
 A second section reports the packed sub-byte storage layer
-(``kernels/pack.py``): payload bytes and elements/byte for every MX
+(``kernels/codec.py``): payload bytes and elements/byte for every MX
 format — FP4 must measure 2 elements per byte, FP6 four per three.
 
-This doubles as CI's wire-byte regression gate: ``--check BASELINE``
-fails (exit 1) if any policy's wire bytes regress >10% over the
-committed baseline (``benchmarks/baselines/wire_bytes.json``).
+A third section (``kernel_hbm``) measures the packed *pipeline* HBM
+footprint per MX policy: the bytes every GEMM-operand payload + scale
+grid of one fwd+bwd step actually occupies under
+``mx_quantize(packed=True)`` — the buffers the packed Pallas kernels
+emit and consume.  FP4 payload buffers must measure 0.5 B/elem (FP6
+0.75) end to end; no byte-wide intermediate exists between quantize
+and GEMM.
+
+This doubles as CI's regression gate: ``--check BASELINE`` fails
+(exit 1) if any policy's wire bytes — or its packed-pipeline HBM bytes
+— regress >10% over the committed baseline
+(``benchmarks/baselines/wire_bytes.json``).
 
 Run:
     PYTHONPATH=src python -m benchmarks.wire_bytes [--quick]
@@ -63,7 +73,7 @@ def measure(quick=False):
     report = {"shape": {"B": b, "S": s, "K": k, "N": n,
                         "mesh": "data=2,model=4"},
               "policies": {}}
-    for pname in ("hfp8", "hfp8_block", "mxfp8"):
+    for pname in ("hfp8", "hfp8_block", "mxfp8", "mxfp6", "mxfp4"):
         pol = get_policy(pname)
 
         def loss(x, w):
@@ -100,6 +110,47 @@ def measure(quick=False):
             "bytes_per_element": (int(np.prod(p.shape))
                                   + int(np.prod(s8.shape))) / elems,
         }
+
+    # packed-pipeline HBM footprint per MX policy (DESIGN.md §10): the
+    # payload + scale buffers one fwd+bwd qlinear step materializes —
+    # exactly what the packed quantize kernels emit and the packed GEMM
+    # consumes.  Deterministic (array-level, not fusion-dependent), so
+    # the >10% gate also covers memory-footprint regressions.
+    report["kernel_hbm"] = {}
+    x3 = jnp.asarray(rng.normal(0, 1, (b, s, k)), jnp.float32)
+    w2 = jnp.asarray(rng.normal(0, 0.3, (k, n)), jnp.float32)
+    g3 = jnp.asarray(rng.normal(0, 1, (b, s, n)), jnp.float32)
+    for pname in ("mxfp8", "mxfp6", "mxfp4"):
+        pol = get_policy(pname)
+        bufs = {
+            # fwd: x along K, w.T along K; dgrad: g along N, w along N;
+            # wgrad: x.T and g.T along tokens (the linear.py roles)
+            "fwd_act": ops.mx_quantize(x3, pol.mx_fwd, impl="xla",
+                                       packed=True),
+            "fwd_w": ops.mx_quantize(w2.T, pol.mx_fwd, impl="xla",
+                                     packed=True),
+            "dgrad_grad": ops.mx_quantize(g3, pol.mx_bwd_name, impl="xla",
+                                          packed=True),
+            "dgrad_w": ops.mx_quantize(w2, pol.mx_fwd, impl="xla",
+                                       packed=True),
+            "wgrad_act": ops.mx_quantize(
+                x3.reshape(-1, k).T, pol.mx_wgrad_act_name, impl="xla",
+                packed=True),
+            "wgrad_grad": ops.mx_quantize(
+                g3.reshape(-1, n).T, pol.mx_wgrad_grad_name, impl="xla",
+                packed=True),
+        }
+        rec = {}
+        total = 0
+        for role, (p, s8) in bufs.items():
+            pb, sb = int(np.prod(p.shape)), int(np.prod(s8.shape))
+            rec[role] = {"payload_bytes": pb, "scale_bytes": sb}
+            total += pb + sb
+        elems_fwd = b * s * k
+        rec["fwd_act_bytes_per_element"] = (
+            bufs["fwd_act"][0].size + bufs["fwd_act"][1].size) / elems_fwd
+        rec["total_bytes"] = total
+        report["kernel_hbm"][pname] = rec
     return report
 
 
@@ -124,6 +175,18 @@ def check(report, baseline_path, tol=1.10):
             print(f"packed {name}: {rec['elems_per_payload_byte']} "
                   f"elems/byte < baseline {b['elems_per_payload_byte']}")
             failed.append(name)
+    # packed-pipeline HBM footprint: a policy's per-step payload+scale
+    # bytes growing >10% means something un-packed (or re-widened)
+    for pname, rec in report.get("kernel_hbm", {}).items():
+        b = base.get("kernel_hbm", {}).get(pname)
+        if b is None:
+            continue
+        ratio = rec["total_bytes"] / max(b["total_bytes"], 1.0)
+        status = "OK" if ratio <= tol else "REGRESSED"
+        print(f"kernel-hbm {pname}: {rec['total_bytes']} vs baseline "
+              f"{b['total_bytes']} ({ratio:.3f}x) {status}")
+        if ratio > tol:
+            failed.append(f"kernel_hbm:{pname}")
     return failed
 
 

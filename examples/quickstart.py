@@ -3,12 +3,15 @@
 1. ExSdotp semantics: fused vs cascaded accumulation accuracy (Table IV in
    miniature);
 2. the expanding-GEMM Pallas kernel (interpret mode) vs its oracle;
-3. a tiny HFP8-trained transformer: forward fp8-E4M3, backward fp8-E5M2,
-   fp32 accumulation everywhere — loss goes down;
+3. a tiny quantized-trained transformer (default HFP8: forward fp8-E4M3,
+   backward fp8-E5M2, fp32 accumulation everywhere; ``--policy mxfp6``
+   or ``mxfp4`` runs the packed sub-byte MX pipeline instead) — loss
+   goes down;
 4. greedy decoding from the trained model.
 
-Run:  PYTHONPATH=src python examples/quickstart.py
+Run:  PYTHONPATH=src python examples/quickstart.py [--policy mxfp4]
 """
+import argparse
 import dataclasses
 
 import jax
@@ -18,11 +21,17 @@ import numpy as np
 from repro.configs import ARCHS
 from repro.core import exsdotp as X
 from repro.core import formats as F
+from repro.core.policy import POLICIES
 from repro.kernels import ops, ref
+from repro.launch.hlo_analysis import format_packed_footprint
 from repro.models import build_model
 from repro.optim.adamw import AdamWConfig
 from repro.serve.decode import generate
 from repro.train.train_step import make_train_state, make_train_step
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--policy", default="hfp8", choices=sorted(POLICIES))
+ARGS = ap.parse_args()
 
 print("=" * 64)
 print("1) ExSdotp: fused 3-term add beats the ExFMA cascade")
@@ -44,8 +53,12 @@ want = ref.exsdotp_gemm_ref(A, B, 1.0)
 print(f"   max|kernel - oracle| = {float(jnp.max(jnp.abs(out - want))):.2e}")
 
 print("=" * 64)
-print("3) HFP8 training (fp8-E4M3 fwd / fp8-E5M2 bwd, fp32 accum)")
-cfg = dataclasses.replace(ARCHS["qwen2.5-3b"].reduced(), vocab_size=64)
+print(f"3) {ARGS.policy} training (quantized fwd/bwd, fp32 accum)")
+# the packed-payload footprint this policy's GEMM operands occupy
+# (DESIGN.md §10): sub-byte MX policies really store 0.75 / 0.5 B/elem
+print(format_packed_footprint(ARGS.policy))
+cfg = dataclasses.replace(ARCHS["qwen2.5-3b"].reduced(), vocab_size=64,
+                          policy_name=ARGS.policy)
 model = build_model(cfg)
 opt = AdamWConfig(lr=3e-3, warmup_steps=5, schedule="constant")
 state = make_train_state(model, jax.random.key(0), opt)

@@ -15,7 +15,9 @@ import jax
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.policy import POLICIES
 from repro.data.pipeline import DataConfig, SyntheticTokens
+from repro.launch.hlo_analysis import format_packed_footprint
 from repro.models import build_model
 from repro.optim.adamw import AdamWConfig
 from repro.train.train_step import make_train_state, make_train_step
@@ -35,8 +37,7 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--preset", default="tiny", choices=sorted(PRESETS))
     ap.add_argument("--steps", type=int, default=30)
-    ap.add_argument("--policy", default="hfp8",
-                    choices=["hfp8", "fp8e4", "bf16", "fp16", "fp32"])
+    ap.add_argument("--policy", default="hfp8", choices=sorted(POLICIES))
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
     ap.add_argument("--save-every", type=int, default=25)
     ap.add_argument("--microbatches", type=int, default=1)
@@ -54,6 +55,8 @@ def main():
         jax.eval_shape(model.init, jax.random.key(0))))
     print(f"[train_lm] {cfg.name}: {n_params/1e6:.1f}M params, "
           f"policy={args.policy}")
+    # what the packed payload pipeline (DESIGN.md §10) buys per operand
+    print(format_packed_footprint(args.policy))
 
     opt = AdamWConfig(lr=3e-4, warmup_steps=20, total_steps=max(args.steps, 100))
     state = make_train_state(model, jax.random.key(0), opt)

@@ -40,14 +40,20 @@ def _qlinear_nd_fwd(x, w, policy: Policy, impl: str):
     dims (batch/sequence-parallel) survive into the GEMM instead of being
     all-gathered by a flatten (§Perf iteration D1)."""
     if policy.mx:
-        # fused MX path (DESIGN.md §8): per-(row × group-of-32-along-K)
-        # E8M0 shared exponents, quantize-in-kernel; like the block path,
-        # residuals are the high-precision operands (bwd re-quantizes
-        # fused, in the backward formats).  Native rank: MX scales are
-        # per-row, so leading dims stay batch dims.
-        y = ops.mx_gemm(x, w, mx_a=policy.mx_fwd,
-                        out_dtype=policy.compute_dtype, impl=impl)
-        return y, (x, w)
+        # packed MX pipeline (DESIGN.md §10): quantize kernels emit the
+        # packed uint8 payloads + E8M0 byte grids directly, the GEMM
+        # consumes packed refs and decodes in-register — the operands
+        # exist in HBM only at width/8 (+1/32) bytes per element.  The
+        # activation residual is that same packed payload (0.53 B/elem
+        # for FP4 vs 2 B bf16), re-grouped along the token axis in bwd
+        # for wgrad.  Native rank: MX scales are per-row, so leading
+        # dims stay batch dims.
+        mxf = policy.mx_fwd
+        xp, sx8 = ops.mx_quantize(x, mxf, impl=impl, packed=True)
+        wp, sw8 = ops.mx_quantize(w.T, mxf, impl=impl, packed=True)
+        y = ops.mx_gemm_packed(xp, sx8, wp, sw8, mx_a=mxf,
+                               out_dtype=policy.compute_dtype, impl=impl)
+        return y, (xp, sx8, w)
     cfg = policy.block_cfg
     if cfg is not None:
         # fused block-scaled path (DESIGN.md §3): per-(row-tile × K-tile)
@@ -76,18 +82,31 @@ def _qlinear_nd_fwd(x, w, policy: Policy, impl: str):
 
 def _qlinear_nd_bwd(policy: Policy, impl: str, res, g):
     if policy.mx:
-        x, w = res
+        xp, sx8, w = res
         cd = policy.compute_dtype
-        # dgrad: E5M2-element grads × E4M3-element weights, groups of 32
-        # along the contracted N axis; wgrad: E4M3 acts × E5M2 grads,
-        # groups along the contracted token axis (dW sums over all
-        # tokens, so the flatten is by construction).
-        dx = ops.mx_gemm(g, w.T, mx_a=policy.mx_bwd_name,
-                         mx_b=policy.mx_fwd, out_dtype=cd, impl=impl)
-        g2 = g.reshape(-1, g.shape[-1])
-        x2 = x.reshape(-1, x.shape[-1])
-        dw = ops.mx_gemm(x2.T, g2, mx_a=policy.mx_fwd,
-                         mx_b=policy.mx_bwd_name, out_dtype=cd, impl=impl)
+        mxf, mxb = policy.mx_fwd, policy.mx_bwd_name
+        mxwa = policy.mx_wgrad_act_name
+        mxwg = policy.mx_wgrad_grad_name
+        k, n = w.shape
+        # dgrad: bwd-format grads × fwd-format weights, groups of 32
+        # along the contracted N axis on both packed operands.
+        gp, sg8 = ops.mx_quantize(g, mxb, impl=impl, packed=True)
+        wnp, swn8 = ops.mx_quantize(w, mxf, impl=impl, packed=True)
+        dx = ops.mx_gemm_packed(gp, sg8, wnp, swn8, mx_a=mxb, mx_b=mxf,
+                                out_dtype=cd, impl=impl)
+        # wgrad (possibly in wider "master" formats — mx_wgrad_*): both
+        # operands re-group along the contracted token axis (dW sums
+        # over all tokens, so the flatten is by construction).  x comes
+        # from its packed fwd payload — the one fwd rounding the narrow
+        # residual implies, exactly like the per-tensor path's fp8
+        # residuals; the raw cotangent takes no extra rounding.
+        xf = ops.mx_dequantize_packed(xp, sx8, mxf, k=k)
+        x2 = xf.reshape(-1, k)
+        g2 = g.astype(jnp.float32).reshape(-1, n)
+        xtp, sxt8 = ops.mx_quantize(x2.T, mxwa, impl=impl, packed=True)
+        gtp, sgt8 = ops.mx_quantize(g2.T, mxwg, impl=impl, packed=True)
+        dw = ops.mx_gemm_packed(xtp, sxt8, gtp, sgt8, mx_a=mxwa,
+                                mx_b=mxwg, out_dtype=cd, impl=impl)
         return dx, dw
     cfg = policy.block_cfg
     if cfg is not None:

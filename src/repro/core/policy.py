@@ -15,8 +15,8 @@ from typing import Optional
 
 import jax.numpy as jnp
 
-__all__ = ["Policy", "HFP8", "FP8E4", "MXFP8", "BF16", "FP16", "FP32",
-           "POLICIES", "get_policy"]
+__all__ = ["Policy", "HFP8", "FP8E4", "MXFP8", "MXFP6", "MXFP4",
+           "BF16", "FP16", "FP32", "POLICIES", "get_policy"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,13 +38,22 @@ class Policy:
     #: round block scales up to powers of two (MX-style shared
     #: exponents); pow2 rescaling is exact, so dequant adds no rounding
     block_pow2: bool = True
-    #: MX format names (DESIGN.md §8) for the forward / backward GEMM
-    #: operands; non-empty routes every QLinear through ``ops.mx_gemm``
-    #: (groups of 32 along K, E8M0 shared scales) instead of the
+    #: MX format names (DESIGN.md §8/§10) for the forward / backward
+    #: GEMM operands; non-empty routes every QLinear through the packed
+    #: MX pipeline (``ops.mx_quantize(packed=True)`` →
+    #: ``ops.mx_gemm_packed``: groups of 32 along K, E8M0 shared scales,
+    #: payloads packed to ``width/8`` bytes per element) instead of the
     #: per-tensor or block-scaled paths.  ``mx_bwd`` defaults to
     #: ``mx_fwd`` when only the forward format is given.
     mx_fwd: str = ""
     mx_bwd: str = ""
+    #: wgrad operand formats (activation side / gradient side).  Sub-byte
+    #: training recipes keep the weight-gradient GEMM in wider "master"
+    #: formats (Graphcore/IBM FP8 master wgrad): ``mxfp6``/``mxfp4`` set
+    #: these to the MXFP8 pair while fwd/dgrad run 6/4-bit.  Empty
+    #: defaults to ``mx_fwd`` / ``mx_bwd`` (the mxfp8 behavior).
+    mx_wgrad_act: str = ""
+    mx_wgrad_grad: str = ""
     #: loss-scaling needed? (fp16/fp8-e5m2 gradients have narrow range)
     loss_scaling: bool = False
 
@@ -70,6 +79,14 @@ class Policy:
     def mx_bwd_name(self) -> str:
         return self.mx_bwd or self.mx_fwd
 
+    @property
+    def mx_wgrad_act_name(self) -> str:
+        return self.mx_wgrad_act or self.mx_fwd
+
+    @property
+    def mx_wgrad_grad_name(self) -> str:
+        return self.mx_wgrad_grad or self.mx_bwd_name
+
 
 # The paper's training recipe: E4M3 forward (more precision), E5M2 backward
 # (more range — gradients are long-tailed), fp32 accumulate, bf16 carrier.
@@ -88,13 +105,30 @@ HFP8_BLOCK = Policy("hfp8_block", jnp.float8_e4m3, jnp.float8_e5m2,
 MXFP8 = Policy("mxfp8", jnp.float8_e4m3, jnp.float8_e5m2,
                jnp.bfloat16, jnp.float32,
                mx_fwd="mxfp8e4m3", mx_bwd="mxfp8e5m2", loss_scaling=True)
+#: Sub-byte MX training policies (DESIGN.md §10): payloads stay packed
+#: (0.75 / 0.5 B per element) from the quantize kernel through the GEMM
+#: and across the explicit TP wire.  mxfp6 pairs E2M3 forward (more
+#: precision) with E3M2 backward (more range — the same asymmetry as
+#: HFP8, one format class down); mxfp4 runs E2M1 forward with FP8-E5M2
+#: gradients (4-bit grads don't train).  Both keep the weight-gradient
+#: GEMM in the MXFP8 pair — the "FP8 master wgrad" recipe.
+MXFP6 = Policy("mxfp6", jnp.float8_e4m3, jnp.float8_e5m2,
+               jnp.bfloat16, jnp.float32,
+               mx_fwd="mxfp6e2m3", mx_bwd="mxfp6e3m2",
+               mx_wgrad_act="mxfp8e4m3", mx_wgrad_grad="mxfp8e5m2",
+               loss_scaling=True)
+MXFP4 = Policy("mxfp4", jnp.float8_e4m3, jnp.float8_e5m2,
+               jnp.bfloat16, jnp.float32,
+               mx_fwd="mxfp4e2m1", mx_bwd="mxfp8e5m2",
+               mx_wgrad_act="mxfp8e4m3", mx_wgrad_grad="mxfp8e5m2",
+               loss_scaling=True)
 BF16 = Policy("bf16", None, None, jnp.bfloat16, jnp.float32)
 FP16 = Policy("fp16", None, None, jnp.float16, jnp.float32,
               loss_scaling=True)
 FP32 = Policy("fp32", None, None, jnp.float32, jnp.float32)
 
-POLICIES = {p.name: p for p in (HFP8, FP8E4, HFP8_BLOCK, MXFP8, BF16, FP16,
-                                FP32)}
+POLICIES = {p.name: p for p in (HFP8, FP8E4, HFP8_BLOCK, MXFP8, MXFP6,
+                                MXFP4, BF16, FP16, FP32)}
 
 
 def get_policy(name) -> Policy:

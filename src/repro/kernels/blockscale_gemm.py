@@ -30,10 +30,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from ..core.formats import _quantize_f32, get_mx_format
+from ..core.formats import _quantize_f32, e8m0_decode, get_mx_format
 from ._compat import CompilerParams
+from .codec import get_codec
 
-__all__ = ["blockscale_gemm_pallas", "mx_gemm_pallas"]
+__all__ = ["blockscale_gemm_pallas", "mx_gemm_pallas",
+           "mx_gemm_packed_pallas"]
 
 
 def _kernel(a_ref, b_ref, sa_ref, sb_ref, o_ref, acc_ref,
@@ -209,3 +211,103 @@ def mx_gemm_pallas(a: jax.Array, b: jax.Array,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(a, b, sae.astype(jnp.float32), sbe.astype(jnp.float32))
+
+
+# --------------------------------------------------------- packed MX ------
+# The storage-resident MX GEMM (DESIGN.md §10): operands arrive as the
+# *packed* uint8 payloads ``mx_quant_packed_pallas`` emitted, with their
+# E8M0 scale codes.  VMEM holds packed bytes (width/8 B per element);
+# the unpack + bit-pattern decode happens in-register, per K-tile, right
+# next to the E8M0 dequant — ExSdotp's narrow-in/wide-accumulate
+# structure, with HBM and VMEM traffic at the format's true width.
+# Scale codes enter at element resolution (``sae8[M, K]`` uint8 — the
+# compact [M, K/32] grid would be lane-illegal on compiled TPU, and a
+# byte is 4x narrower than the f32 expansion the value-path kernel
+# carries).  B's payload is stored transposed ([N, K·w/8]: groups run
+# along K down each column), so both operands unpack along their lane
+# axis and the MXU contracts their last dims.
+
+def _mx_packed_gemm_kernel(ap_ref, bp_ref, sa8_ref, sb8_ref, o_ref, acc_ref,
+                           *, codec_a, codec_b):
+    """One (i, j, k) grid step of the packed-ref MX GEMM.
+
+    acc += (decode(A_packed) · sa) @ (decode(B_packed) · sb)^T with the
+    per-group pow2 rescale folded into the operands (exact — E8M0), f32
+    accumulation across the K grid, single rounding on the last step.
+    A 0xFF scale code decodes to NaN and poisons exactly its group's
+    contributions — §8's convention, straight from the byte grid.
+    """
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # in-register unpack + decode + E8M0 dequant: the packed bytes are
+    # the only operand representation VMEM ever holds
+    av = codec_a.decode_lanes(ap_ref[...]) * e8m0_decode(sa8_ref[...])
+    bv = codec_b.decode_lanes(bp_ref[...]) * e8m0_decode(sb8_ref[...])
+    acc_ref[...] += jax.lax.dot_general(
+        av, bv, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(kk == pl.num_programs(2) - 1)
+    def _write():
+        # the single rounding of the whole per-output-tile ExSdotp chain
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mx_a", "mx_b", "out_dtype",
+                     "block_m", "block_n", "block_k", "interpret"))
+def mx_gemm_packed_pallas(ap: jax.Array, bp: jax.Array,
+                          sae8: jax.Array, sbe8: jax.Array, *,
+                          mx_a, mx_b=None, out_dtype=jnp.float32,
+                          block_m: int = 128, block_n: int = 128,
+                          block_k: int = 512,
+                          interpret: bool = False) -> jax.Array:
+    """C = downcast(sum_k decode(A_p)·sa · (decode(B_p)·sb)^T), fp32 accum.
+
+    ``ap[M, K·wa/8]`` / ``bp[N, K·wb/8]`` are packed uint8 payloads (B
+    transposed — its groups run along K); ``sae8[M, K]`` / ``sbe8[N, K]``
+    are E8M0 scale codes broadcast to element resolution
+    (``ops.mx_gemm_packed`` expands the compact grids and pads).  Shapes
+    must be multiples of the blocks and ``block_k`` a multiple of the
+    group and of both codecs' ``lane_unit``.
+    """
+    mx_a = get_mx_format(mx_a)
+    mx_b = mx_a if mx_b is None else get_mx_format(mx_b)
+    g = mx_a.group
+    assert mx_b.group == g, (mx_a, mx_b)
+    ca, cb = get_codec(mx_a), get_codec(mx_b)
+    m, k = sae8.shape
+    n, k2 = sbe8.shape
+    assert k == k2, (sae8.shape, sbe8.shape)
+    assert ap.shape == (m, ca.packed_cols(k)), (ap.shape, (m, k))
+    assert bp.shape == (n, cb.packed_cols(k)), (bp.shape, (n, k))
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0, (
+        (m, n, k), (block_m, block_n, block_k))
+    assert block_k % g == 0, (block_k, g)
+    assert block_k % ca.lane_unit == 0 and block_k % cb.lane_unit == 0, (
+        block_k, ca.lane_unit, cb.lane_unit)
+    grid = (m // block_m, n // block_n, k // block_k)
+    bkb_a = ca.packed_cols(block_k)
+    bkb_b = cb.packed_cols(block_k)
+    kern = functools.partial(_mx_packed_gemm_kernel, codec_a=ca, codec_b=cb)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, bkb_a), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_n, bkb_b), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_n, block_k), lambda i, j, kk: (j, kk)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(ap, bp, sae8, sbe8)

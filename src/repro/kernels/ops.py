@@ -16,20 +16,25 @@ import functools
 import jax
 import jax.numpy as jnp
 
+import math
+
 from ..core.formats import decode, e8m0_decode, e8m0_encode, encode, \
     get_mx_format
 from ..core.scaling import (BlockScaleConfig, apply_group_scales,
                             compute_block_scales, compute_group_scales,
                             expand_group_scales)
-from . import pack as packlib
 from . import ref
-from .blockscale_gemm import blockscale_gemm_pallas, mx_gemm_pallas
+from .blockscale_gemm import (blockscale_gemm_pallas, mx_gemm_packed_pallas,
+                              mx_gemm_pallas)
+from .codec import get_codec
 from .exsdotp_gemm import exsdotp_gemm_pallas, default_blocks
-from .quant import mx_quant_pallas, quant_blockwise_pallas
+from .quant import (mx_quant_packed_pallas, mx_quant_pallas,
+                    quant_blockwise_pallas)
 
 __all__ = ["exsdotp_gemm", "blockscale_gemm", "blockscale_blocks",
            "quantize_tensor", "quantize_blockwise", "dequantize_blockwise",
-           "mx_quantize", "mx_dequantize", "mx_gemm", "mx_blocks",
+           "mx_quantize", "mx_dequantize", "mx_dequantize_packed",
+           "mx_gemm", "mx_blocks", "mx_packed_blocks",
            "mx_pack", "mx_unpack", "mx_gemm_packed",
            "resolve_impl"]
 
@@ -146,7 +151,6 @@ def mx_blocks(m: int, n: int, k: int, group: int) -> tuple[int, int, int]:
     128, sublane M to 8), plus ``block_k`` must contain whole groups —
     with the standard group of 32 the 128-lane floor already does.
     """
-    import math
     bm = min(128, _ceil_mult(m, 8))
     bn = min(128, _ceil_mult(n, 128))
     lk = 128 * group // math.gcd(128, group)   # lcm: lane-legal, whole groups
@@ -154,67 +158,118 @@ def mx_blocks(m: int, n: int, k: int, group: int) -> tuple[int, int, int]:
     return bm, bn, bk
 
 
+def mx_packed_blocks(m: int, n: int, group: int,
+                     *codecs) -> tuple[int, int, int]:
+    """Tile sizes for the *packed-ref* MX kernels (DESIGN.md §10).
+
+    M/N follow the ``blockscale_blocks`` rules; ``block_k`` must contain
+    whole groups AND yield lane-legal packed byte runs for every codec
+    involved (``codec.lane_unit``: 128 for FP8, 256 for FP4, 512 for
+    FP6 — a 128-multiple of bytes after packing).
+    """
+    bm = min(128, _ceil_mult(m, 8))
+    bn = min(128, _ceil_mult(n, 128))
+    bk = group
+    for unit in [c.lane_unit for c in codecs] + [128]:
+        bk = bk * unit // math.gcd(bk, unit)   # lcm
+    return bm, bn, bk
+
+
+def _pad_group(x: jax.Array, group: int) -> jax.Array:
+    """Zero-pad the last axis up to a whole number of groups (the
+    ragged-K mask: zeros never raise a group amax, an all-pad group
+    gets the neutral scale 1 and a zero payload, and its GEMM
+    contribution is exactly 0)."""
+    pad = (-x.shape[-1]) % group
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    return x
+
+
 def mx_quantize(x: jax.Array, mx, *, impl: str = "auto",
                 packed: bool = False):
     """Per-group MX quantization of ``x[..., M, K]`` (DESIGN.md §8).
 
     Returns ``(q, scales)``: ``q[..., M, K]`` f32 element-format values
-    of ``x / s`` and ``scales[..., M, K/group]`` E8M0 pow2 scales, with
-    ``x ~= q * s`` broadcast per 1×group strip along K (exact rescale —
-    pow2).  Groups never span rows, so leading dims are free batch dims.
+    of ``x / s`` and ``scales[..., M, ⌈K/group⌉]`` E8M0 pow2 scales,
+    with ``x ~= q * s`` broadcast per 1×group strip along K (exact
+    rescale — pow2).  Groups never span rows, so leading dims are free
+    batch dims.  A ragged K (not a whole number of groups) is
+    zero-padded internally: ``q`` is sliced back to ``K`` and the last
+    scale covers the partial tail group.
 
-    With ``packed=True`` (DESIGN.md §9) the return is the *storage*
+    With ``packed=True`` (DESIGN.md §10) the return is the *storage*
     layout instead: ``(payload, scales)`` where ``payload`` is the
     densely packed uint8 bit patterns (FP8: one byte per element, FP6:
-    three bytes per four, FP4: one byte per two) and ``scales`` the
-    E8M0 uint8 codes — the honest HBM/wire footprint.  The round-trip
-    through ``mx_unpack``/``e8m0_decode`` is lossless, so
-    ``mx_gemm_packed`` on packed operands is bit-identical to the
-    value-space path.
+    three bytes per four, FP4: one byte per two) covering
+    ``group-padded`` K, and ``scales`` the E8M0 uint8 codes — the
+    honest HBM/wire footprint.  On the Pallas impls the kernel *emits*
+    the packed payload directly (``mx_quant_packed_pallas``): no byte-
+    or f32-wide quantized intermediate exists between the quantize and
+    the packed GEMM.  The round-trip through ``mx_unpack``/
+    ``e8m0_decode`` is lossless, so ``mx_gemm_packed`` on packed
+    operands is bit-identical to the value-space path.
     """
     impl = resolve_impl(impl)
     mx = get_mx_format(mx)
     *lead, m, k = x.shape
-    assert k % mx.group == 0, (k, mx.group)
+    x = _pad_group(x, mx.group)          # ragged K: pad-and-mask
+    kg = x.shape[-1]
     if impl == "xla":
         q, s = ref.mx_quant_ref(x, mx=mx)
-    else:
-        bm, _, bk = mx_blocks(m, 1, k, mx.group)
+        if packed:
+            return mx_pack(q, mx), e8m0_encode(s)
+        return (q[..., :k] if kg != k else q), s
+    interp = impl == "pallas_interpret"
+    if packed:
+        codec = get_codec(mx)
+        bm, _, bk = mx_packed_blocks(m, 1, mx.group, codec)
         xp = _pad_last2(x.astype(jnp.float32), bm, bk)
         mp, kp = xp.shape[-2], xp.shape[-1]
-        q, s = mx_quant_pallas(xp.reshape(-1, kp), mx=mx, block_m=bm,
-                               block_k=bk,
-                               interpret=(impl == "pallas_interpret"))
-        q = q.reshape(*lead, mp, kp)[..., :m, :k]
-        s = s.reshape(*lead, mp, kp // mx.group)[..., :m, :k // mx.group]
-    if packed:
-        return mx_pack(q, mx), e8m0_encode(s)
+        p, s8 = mx_quant_packed_pallas(xp.reshape(-1, kp), mx=mx,
+                                       block_m=bm, block_k=bk,
+                                       interpret=interp)
+        p = p.reshape(*lead, mp, codec.packed_cols(kp))[
+            ..., :m, :codec.packed_cols(kg)]
+        s8 = s8.reshape(*lead, mp, kp // mx.group)[..., :m, :kg // mx.group]
+        return p, s8
+    bm, _, bk = mx_blocks(m, 1, kg, mx.group)
+    xp = _pad_last2(x.astype(jnp.float32), bm, bk)
+    mp, kp = xp.shape[-2], xp.shape[-1]
+    q, s = mx_quant_pallas(xp.reshape(-1, kp), mx=mx, block_m=bm,
+                           block_k=bk, interpret=interp)
+    q = q.reshape(*lead, mp, kp)[..., :m, :k]
+    s = s.reshape(*lead, mp, kp // mx.group)[..., :m, :kg // mx.group]
     return q, s
 
 
 def mx_pack(q: jax.Array, mx) -> jax.Array:
     """Pack MX element values ``q[..., K]`` (f32 carrier, already in the
     element format's value set) into dense uint8 storage:
-    ``[..., K * width / 8]`` bytes.  K must be a multiple of the group
-    (guaranteed by ``mx_quantize``), which covers every pack alignment.
-    """
+    ``[..., ⌈K/align⌉ * width / 8]`` bytes via the payload codec.  A
+    ragged K is zero-padded to the pack alignment (zero codes decode to
+    +0.0 — ``mx_unpack(..., k=K)`` slices the tail back off)."""
     mx = get_mx_format(mx)
-    assert q.shape[-1] % mx.group == 0, (q.shape, mx.group)
-    return packlib.pack_codes(encode(q, mx.elem), mx.elem.width)
+    codec = get_codec(mx)
+    pad = (-q.shape[-1]) % codec.pack_align
+    if pad:
+        q = jnp.pad(q, [(0, 0)] * (q.ndim - 1) + [(0, pad)])
+    return codec.encode_lanes(q)
 
 
-def mx_unpack(p: jax.Array, mx) -> jax.Array:
+def mx_unpack(p: jax.Array, mx, *, k=None) -> jax.Array:
     """Unpack dense uint8 storage back to f32 element values
-    (``[..., K]`` with ``K = bytes * 8 / width``); exact inverse of
-    ``mx_pack`` for every representable value."""
-    mx = get_mx_format(mx)
-    return decode(packlib.unpack_codes(p, mx.elem.width), mx.elem)
+    (``[..., K]`` with ``K = bytes * 8 / width``, sliced to ``k`` when
+    given — the ragged-shape inverse); exact inverse of ``mx_pack`` for
+    every representable value."""
+    vals = get_codec(get_mx_format(mx)).decode_lanes(p)
+    return vals[..., :k] if k is not None else vals
 
 
 def mx_gemm_packed(ap: jax.Array, sa8: jax.Array, bp: jax.Array,
                    sb8: jax.Array, *, mx_a, mx_b=None,
-                   out_dtype=jnp.float32) -> jax.Array:
-    """Expanding GEMM straight from packed MX storage (DESIGN.md §9).
+                   out_dtype=jnp.float32, impl: str = "auto") -> jax.Array:
+    """Expanding GEMM straight from packed MX storage (DESIGN.md §10).
 
     ``(ap, sa8)`` is ``mx_quantize(a[..., M, K], packed=True)``;
     ``(bp, sb8)`` is ``mx_quantize(b.T, packed=True)`` — B's groups run
@@ -223,25 +278,68 @@ def mx_gemm_packed(ap: jax.Array, sa8: jax.Array, bp: jax.Array,
     accumulation → one rounding: bit-identical to
     ``ops.mx_gemm(a, b, impl='xla')`` on the same operands, because the
     pack/unpack round-trip is lossless and the math after it is the
-    same.  The payloads never exist at more than ``width/8`` bytes per
-    element outside the f32 compute window — this is the memory model
-    the wire-byte benchmark measures.
+    same.  On the Pallas impls the packed refs enter the kernel as-is:
+    VMEM holds ``width/8`` bytes per element and the unpack/decode
+    happens in-register per K-tile (``mx_gemm_packed_pallas``) — the
+    payloads never exist byte-wide outside the registers.  This is the
+    memory model the wire-byte benchmark measures.  K may be
+    group-padded relative to the logical shapes (``mx_quantize`` pads
+    ragged K): padded groups contribute exactly zero.
     """
+    impl = resolve_impl(impl)
     mx_a = get_mx_format(mx_a)
     mx_b = mx_a if mx_b is None else get_mx_format(mx_b)
     g = mx_a.group
     assert mx_b.group == g, (mx_a.name, mx_b.name)
-    af = apply_group_scales(mx_unpack(ap, mx_a), e8m0_decode(sa8), g)
-    bf = apply_group_scales(mx_unpack(bp, mx_b), e8m0_decode(sb8), g).T
-    acc = jnp.einsum("...mk,kn->...mn", af, bf,
-                     preferred_element_type=jnp.float32)
-    return acc.astype(out_dtype)
+    if impl == "xla":
+        af = apply_group_scales(mx_unpack(ap, mx_a), e8m0_decode(sa8), g)
+        bf = apply_group_scales(mx_unpack(bp, mx_b), e8m0_decode(sb8), g).T
+        acc = jnp.einsum("...mk,kn->...mn", af, bf,
+                         preferred_element_type=jnp.float32)
+        return acc.astype(out_dtype)
+    ca, cb = get_codec(mx_a), get_codec(mx_b)
+    *lead, m, _ = ap.shape
+    n = bp.shape[0]
+    k = sa8.shape[-1] * g
+    assert ap.shape[-1] == ca.packed_cols(k), (ap.shape, k)
+    assert bp.shape == (n, cb.packed_cols(k)), (bp.shape, (n, k))
+    assert sb8.shape == (n, k // g), (sb8.shape, (n, k // g))
+    bm, bn, bk = mx_packed_blocks(m, n, g, ca, cb)
+    # scale codes enter the kernel at element resolution (compact grids
+    # would be lane-illegal on compiled TPU — the §8 rule, now one u8
+    # per element instead of the value-path's f32)
+    sae8 = jnp.repeat(sa8.reshape(-1, k // g), g, axis=-1)
+    sbe8 = jnp.repeat(sb8, g, axis=-1)
+    # pad rows to tile multiples and K to whole packed lane tiles; zero
+    # payload bytes decode to +0.0 and zero scale codes to 2^-127, so
+    # padded contributions are exactly 0
+    ap2 = _pad2(ap.reshape(-1, ap.shape[-1]), bm, ca.packed_cols(bk))
+    sae8 = _pad2(sae8, bm, bk)
+    bp2 = _pad2(bp, bn, cb.packed_cols(bk))
+    sbe8 = _pad2(sbe8, bn, bk)
+    out = mx_gemm_packed_pallas(
+        ap2, bp2, sae8, sbe8, mx_a=mx_a, mx_b=mx_b, out_dtype=out_dtype,
+        block_m=bm, block_n=bn, block_k=bk,
+        interpret=(impl == "pallas_interpret"))
+    return out[:ap.reshape(-1, ap.shape[-1]).shape[0], :n].reshape(
+        *lead, m, n)
 
 
 def mx_dequantize(q: jax.Array, s: jax.Array, mx) -> jax.Array:
     """``q * s`` per 1×group strip along the last axis (exact for pow2)."""
     mx = get_mx_format(mx)
     return apply_group_scales(q.astype(jnp.float32), s, mx.group)
+
+
+def mx_dequantize_packed(p: jax.Array, s8: jax.Array, mx, *,
+                         k=None) -> jax.Array:
+    """Packed payload + E8M0 codes → f32 values: unpack, decode the
+    byte grid (exact — pow2; 0xFF → NaN) and rescale per group, slicing
+    a group-padded K back to ``k`` when given.  The storage-layer
+    inverse of ``mx_quantize(packed=True)``."""
+    mx = get_mx_format(mx)
+    x = apply_group_scales(mx_unpack(p, mx), e8m0_decode(s8), mx.group)
+    return x[..., :k] if k is not None else x
 
 
 def mx_gemm(a: jax.Array, b: jax.Array, *, mx_a, mx_b=None,

@@ -24,11 +24,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from ..core.formats import _quantize_f32, get_mx_format
+from ..core.formats import _quantize_f32, e8m0_encode, get_mx_format
 from ..core.scaling import compute_group_scales, expand_group_scales
 from ._compat import CompilerParams
+from .codec import get_codec
 
-__all__ = ["quant_blockwise_pallas", "mx_quant_pallas"]
+__all__ = ["quant_blockwise_pallas", "mx_quant_pallas",
+           "mx_quant_packed_pallas"]
 
 
 def _kernel(x_ref, q_ref, s_ref, *, max_normal: float, margin: float):
@@ -147,3 +149,73 @@ def mx_quant_pallas(x: jax.Array, *, mx, block_m: int = 128,
     )(x)
     # compact the element-resolution scales back to one per group
     return q, se[:, ::mx.group]
+
+
+# ----------------------------------------------------- packed MX path --
+
+def _mx_packed_kernel(x_ref, p_ref, s8_ref, *, codec, group: int):
+    """Fused packed MX quantize for one (bm, bk) tile (DESIGN.md §10).
+
+    Same group amax → E8M0 pow2 scale → exact pow2 divide pipeline as
+    ``_mx_kernel``, but the element cast lands straight in *packed*
+    uint8 storage: ``codec.encode_lanes`` quantizes, extracts the bit
+    patterns and packs them into dense lanes in-register, so the
+    payload leaves VMEM at ``width/8`` bytes per element — no byte- or
+    f32-wide quantized intermediate ever reaches HBM.  Scales are
+    written as E8M0 *codes* at element resolution (``s8[bm, bk]``
+    uint8; one byte instead of the f32 path's four) for the same
+    lane-legality reason as ``_mx_kernel``: a compact ``(bm, bk//32)``
+    output tile would be lane-illegal on compiled TPU.  A non-finite
+    group encodes scale 0xFF (NaN) and a max-magnitude payload pattern
+    — the §8 poison convention, byte-level.
+    """
+    x = x_ref[...].astype(jnp.float32)
+    bm, bk = x.shape
+    s = compute_group_scales(x, group, codec.fmt.max_normal)
+    se = expand_group_scales(s, group).reshape(bm, bk)
+    s8_ref[...] = e8m0_encode(se)
+    p_ref[...] = codec.encode_lanes(x / se)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mx", "block_m", "block_k", "interpret"))
+def mx_quant_packed_pallas(x: jax.Array, *, mx, block_m: int = 128,
+                           block_k: int = 512, interpret: bool = False):
+    """Quantize ``x[M, K]`` into *packed* MX storage (DESIGN.md §10).
+
+    Returns ``(payload[M, K·w/8] u8, s8[M, K/group] u8)``: the densely
+    packed element bit patterns and the E8M0 scale codes — the honest
+    HBM footprint, emitted directly by the kernel.  Shapes must be
+    multiples of the blocks (``ops.mx_quantize`` pads); ``block_k``
+    must be a multiple of the group *and* of the codec's ``lane_unit``
+    (packed byte runs must be legal 128-multiple lane tiles on compiled
+    TPU — FP8: 128, FP4: 256, FP6: 512; masked on CPU CI).
+    """
+    mx = get_mx_format(mx)
+    codec = get_codec(mx)
+    m, k = x.shape
+    assert m % block_m == 0 and k % block_k == 0, ((m, k), (block_m, block_k))
+    assert block_k % mx.group == 0, (block_k, mx.group)
+    assert block_k % codec.lane_unit == 0, (block_k, codec.lane_unit)
+    grid = (m // block_m, k // block_k)
+    bkb = codec.packed_cols(block_k)
+    kern = functools.partial(_mx_packed_kernel, codec=codec, group=mx.group)
+    p, s8 = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_m, block_k), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((block_m, bkb), lambda i, j: (i, j)),
+            pl.BlockSpec((block_m, block_k), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, codec.packed_cols(k)), jnp.uint8),
+            jax.ShapeDtypeStruct((m, k), jnp.uint8),
+        ],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(x)
+    # compact the element-resolution scale codes back to one per group
+    return p, s8[:, ::mx.group]

@@ -70,9 +70,13 @@ COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
 
 
 def _shape_info(type_str: str):
-    """(total_bytes, first_shape_dims) for a result type (maybe a tuple)."""
+    """(total_bytes, first_shape_dims, bytes_per_dtype) for a result
+    type (maybe a tuple — each tuple element's bytes are attributed to
+    its own dtype, so mixed u8-payload/f32-state carries split
+    correctly)."""
     total = 0
     first = None
+    per_dtype: dict[str, float] = {}
     for dt, dims in _SHAPE_RE.findall(type_str):
         if dt not in DTYPE_BYTES:
             continue
@@ -81,9 +85,10 @@ def _shape_info(type_str: str):
         for d in shape:
             n *= d
         total += n * DTYPE_BYTES[dt]
+        per_dtype[dt] = per_dtype.get(dt, 0.0) + n * DTYPE_BYTES[dt]
         if first is None:
             first = shape
-    return total, (first or [])
+    return total, (first or []), per_dtype
 
 
 @dataclasses.dataclass
@@ -98,6 +103,7 @@ class _Op:
     rest: str
     coll_kind: Optional[str] = None
     flops: float = 0.0
+    out_dtype_bytes: Optional[dict] = None
 
 
 def parse_module(hlo: str):
@@ -117,7 +123,7 @@ def parse_module(hlo: str):
         if not mo or cur is None:
             continue
         name, type_str, kind, rest = mo.groups()
-        out_bytes, out_shape = _shape_info(type_str)
+        out_bytes, out_shape, out_dtype_bytes = _shape_info(type_str)
         operands = re.findall(r"%([\w.\-]+)", rest.split(")")[0])
         called = _CALL_ATTR_RE.findall(rest)
         mb = _BRANCHES_RE.search(rest)
@@ -128,7 +134,7 @@ def parse_module(hlo: str):
             mt = _TRIP_RE.search(rest)
             trip = int(mt.group(1)) if mt else 1
         op = _Op(name, kind, out_bytes, out_shape, operands, called, trip,
-                 rest)
+                 rest, out_dtype_bytes=out_dtype_bytes)
         base = kind[:-6] if kind.endswith("-start") else kind
         if base in COLLECTIVES:
             op.coll_kind = base
@@ -196,6 +202,7 @@ def analyze(hlo: str) -> dict:
 
     flops = 0.0
     bytes_acc = 0.0
+    by_dtype = defaultdict(float)
     coll = dict.fromkeys(COLLECTIVES, 0.0)
     coll_counts = dict.fromkeys(COLLECTIVES, 0.0)
     for cname, table in comps.items():
@@ -213,6 +220,11 @@ def analyze(hlo: str) -> dict:
                 coll_counts[op.coll_kind] += m
             if in_fusion or op.kind in _SKIP_BYTES:
                 continue
+            # result bytes by dtype: makes the packed payload layer
+            # visible (u8 buffers at width/8 B/elem — DESIGN.md §10);
+            # tuple results split per element dtype
+            for dt, b in (op.out_dtype_bytes or {}).items():
+                by_dtype[dt] += m * b
             if op.kind in ("dynamic-slice", "slice", "gather"):
                 # only the sliced window moves, not the whole operand
                 bytes_acc += m * (2 * op.out_bytes)
@@ -227,7 +239,8 @@ def analyze(hlo: str) -> dict:
                            if o in table)
                 bytes_acc += m * (op.out_bytes + opnd)
     return {"flops": flops, "bytes": bytes_acc, "coll_bytes": coll,
-            "coll_counts": coll_counts, "coll_total": sum(coll.values())}
+            "coll_counts": coll_counts, "coll_total": sum(coll.values()),
+            "bytes_by_dtype": dict(by_dtype)}
 
 
 # ---------------------------------------------------------------------------
@@ -288,3 +301,77 @@ def attribute(hlo: str, *, depth: int = 4, top: int = 20) -> dict:
 
     return {"collectives": topk(coll), "dot_flops": topk(dots),
             "buffers": topk(bufs)}
+
+
+# ---------------------------------------------------------------------------
+# packed-pipeline footprints: the HBM/wire bytes-per-element each policy's
+# GEMM operands occupy at rest under the packed payload layer (DESIGN.md
+# §10) — what the codec refactor actually buys. Used by the examples'
+# per-policy summaries and the wire-byte benchmark's memory gate.
+# ---------------------------------------------------------------------------
+
+def policy_packed_footprint(policy) -> dict:
+    """Bytes per element of every GEMM operand under ``policy``.
+
+    For MX policies this is the *packed* storage cost: element payload at
+    ``width/8`` bytes plus one amortized E8M0 byte per group of 32
+    (``MXFormat.packed_bytes_per_element``) — the layout the packed
+    quantize kernel emits and the packed GEMM consumes, and the size of
+    the activation residual saved for wgrad. For per-tensor/block fp8
+    policies it is one byte plus the (negligible / 1-per-16Ki) scale
+    overhead; unquantized policies pay the carrier dtype.
+
+    Returns ``{"policy", "operands": {role: bytes_per_element},
+    "residual_bpe", "fwd_wire_fraction_vs_bf16"}``.
+    """
+    import jax.numpy as jnp
+
+    from ..core.formats import get_mx_format
+    from ..core.policy import get_policy
+
+    pol = get_policy(policy)
+    out = {"policy": pol.name, "operands": {}}
+    if pol.mx:
+        roles = {
+            "fwd_act": pol.mx_fwd, "fwd_w": pol.mx_fwd,
+            "dgrad_grad": pol.mx_bwd_name, "dgrad_w": pol.mx_fwd,
+            "wgrad_act": pol.mx_wgrad_act_name,
+            "wgrad_grad": pol.mx_wgrad_grad_name,
+        }
+        out["operands"] = {r: get_mx_format(n).packed_bytes_per_element
+                           for r, n in roles.items()}
+        out["residual_bpe"] = out["operands"]["fwd_act"]
+    elif pol.fwd_dtype is not None:
+        scale_over = (4.0 / (pol.block_scale * pol.block_scale)
+                      if pol.block_scale else 0.0)
+        bpe_f = jnp.dtype(pol.fwd_dtype).itemsize + scale_over
+        bpe_b = jnp.dtype(pol.bwd_dtype).itemsize + scale_over
+        out["operands"] = {"fwd_act": bpe_f, "fwd_w": bpe_f,
+                           "dgrad_grad": bpe_b, "dgrad_w": bpe_f,
+                           "wgrad_act": bpe_f, "wgrad_grad": bpe_b}
+        out["residual_bpe"] = bpe_f
+    else:
+        bpe = float(jnp.dtype(pol.compute_dtype).itemsize)
+        out["operands"] = {r: bpe for r in
+                           ("fwd_act", "fwd_w", "dgrad_grad", "dgrad_w",
+                            "wgrad_act", "wgrad_grad")}
+        out["residual_bpe"] = bpe
+    out["fwd_wire_fraction_vs_bf16"] = out["operands"]["fwd_act"] / 2.0
+    return out
+
+
+def format_packed_footprint(policy) -> str:
+    """One-block human summary of ``policy_packed_footprint`` for the
+    example drivers."""
+    fp = policy_packed_footprint(policy)
+    ops_ = fp["operands"]
+    lines = [f"[{fp['policy']}] packed operand footprint (bytes/element; "
+             f"bf16 baseline = 2.0):"]
+    for role in ("fwd_act", "fwd_w", "dgrad_grad", "dgrad_w",
+                 "wgrad_act", "wgrad_grad"):
+        lines.append(f"  {role:<11} {ops_[role]:.5f}")
+    lines.append(f"  residual    {fp['residual_bpe']:.5f}  "
+                 f"(activation payload saved for wgrad)")
+    lines.append(f"  fwd wire    {fp['fwd_wire_fraction_vs_bf16']:.3f}x "
+                 f"of bf16 bytes")
+    return "\n".join(lines)

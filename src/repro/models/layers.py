@@ -26,14 +26,17 @@ def proj(x, w, b, policy, rules, impl, kind="plain", quantized=True):
     composes with sequence parallelism instead of falling back to a
     GSPMD reshard (DESIGN.md §3, "block scaling × TP/SP").
 
-    MX policies (``mxfp8`` — DESIGN.md §9) ride the same wire natively:
-    operands quantize per-(row × group-of-32) and the one-byte fp8
-    payloads ship with *packed E8M0 byte grids* riding along (one uint8
-    per group, ~1/32 of payload bytes), provided every contraction axis
-    the groups run along — K forward, the local N columns for dgrad,
-    the token axis for wgrad — tiles into whole groups; otherwise they
-    fall back to the GSPMD-sharded fused ``ops.mx_gemm``, which is
-    numerically identical either way."""
+    MX policies (``mxfp8``/``mxfp6``/``mxfp4`` — DESIGN.md §9/§10) ride
+    the same wire natively: operands quantize per-(row × group-of-32)
+    and the narrow payloads — native fp8 bytes, or *packed* sub-byte
+    codec lanes (FP6: 0.75 B/elem, FP4: 0.5 B/elem) — ship with packed
+    E8M0 byte grids riding along (one uint8 per group, ~1/32 of payload
+    bytes), provided every contraction axis the groups run along — K
+    forward, the local N columns for dgrad, the token axis for wgrad —
+    tiles into whole groups (group alignment subsumes pack alignment);
+    otherwise they fall back to the GSPMD-sharded packed MX pipeline
+    (``ops.mx_gemm_packed``), which is numerically identical either
+    way."""
     ok = quantized and tp_applicable(x, rules, policy)
     if ok:
         tp = rules.model_size

@@ -39,6 +39,7 @@ from ..core.policy import Policy
 from ..core.scaling import (BlockScaleConfig, apply_block_scales,
                             apply_group_scales, compute_block_scales,
                             compute_group_scales)
+from ..kernels.codec import get_codec
 
 __all__ = ["tp_column_linear", "tp_row_linear", "tp_applicable",
            "row_applicable", "make_fsdp_gather", "embed_lookup_ep",
@@ -95,35 +96,54 @@ def _deq_block(q, s, br, bc):
     return apply_block_scales(q.astype(jnp.float32), s, br, bc)
 
 
-# ------------------------------------------------------ MX wire (§9) ------
-# MX policies ride the wire natively: the fp8 payload ships in its real
-# one-byte dtype next to a *packed E8M0 byte grid* — one uint8 code per
-# group of 32 (~1/32 of payload bytes; vs 4-byte f32 scales, 4x less
-# scale traffic).  The receiver decodes the grid (exact — pow2) and
-# dequantizes per group *before* the f32 accumulation, so the per-group
-# ExSdotp structure of DESIGN.md §8 holds across chips.
+# ------------------------------------------------- MX wire (§9/§10) ------
+# MX policies ride the wire natively: the payload ships at its true
+# width — fp8 elements in their native one-byte dtype, sub-byte
+# elements (MXFP6/4) as *packed* uint8 lanes via the payload codec
+# (width/8 bytes per element) — next to a *packed E8M0 byte grid*, one
+# uint8 code per group of 32 (~1/32 of payload bytes; vs 4-byte f32
+# scales, 4x less scale traffic).  The receiver unpacks/decodes the
+# payload and the grid (both exact) and dequantizes per group *before*
+# the f32 accumulation, so the per-group ExSdotp structure of
+# DESIGN.md §8 holds across chips.
+
+def _mx_wire_packed(mx) -> bool:
+    """Sub-byte element formats ship packed codec lanes; fp8 elements
+    ship their native one-byte dtype (same bytes, zero decode cost)."""
+    return mx.elem.width < 8 or mx.elem.ml_dtype is None
+
 
 def _quant_mx(x, mx):
     """MX-quantize ``x[..., K]`` for the wire: groups of ``mx.group``
-    along the last axis, E8M0 pow2 scales.  Returns ``(q, s8)`` — the
-    payload in the element format's native one-byte dtype (the cast is
-    bit-identical to the value-space ``formats.quantize``: every
-    ``x / s`` value RNE-rounds to the same representable set) and the
-    uint8 E8M0 codes.  A non-finite group gets the NaN scale (0xFF):
-    payload and decoded scale both read back NaN — the §8 poison
-    convention survives the byte grid.
+    along the last axis, E8M0 pow2 scales.  Returns ``(payload, s8)``
+    — the payload in the element format's native one-byte dtype (fp8;
+    the cast is bit-identical to the value-space ``formats.quantize``)
+    or as densely packed uint8 lanes (sub-byte formats — FP4 ships two
+    elements per byte, FP6 four in three) — and the uint8 E8M0 codes.
+    A non-finite group gets the NaN scale (0xFF): payload and decoded
+    scale both read back NaN — the §8 poison convention survives the
+    byte grid (sub-byte payloads have no NaN encoding; the grid alone
+    carries it).
     """
     xf = x.astype(jnp.float32)
     s = compute_group_scales(xf, mx.group, mx.elem.max_normal)
-    q = apply_group_scales(xf, s, mx.group, inverse=True).astype(
-        mx.elem.ml_dtype)
-    return q, e8m0_encode(s)
+    q = apply_group_scales(xf, s, mx.group, inverse=True)
+    if _mx_wire_packed(mx):
+        payload = get_codec(mx).encode_lanes(q)
+    else:
+        payload = q.astype(mx.elem.ml_dtype)
+    return payload, e8m0_encode(s)
 
 
-def _deq_mx(q, s8, group):
-    """Decode the E8M0 byte grid and rescale per group — exact (pow2),
-    at accumulator granularity like ``_deq_block``."""
-    return apply_group_scales(q.astype(jnp.float32), e8m0_decode(s8), group)
+def _deq_mx(q, s8, mx):
+    """Unpack/decode the payload and the E8M0 byte grid and rescale per
+    group — exact (pow2), at accumulator granularity like
+    ``_deq_block``."""
+    if q.dtype == jnp.uint8:
+        vals = get_codec(mx).decode_lanes(q)
+    else:
+        vals = q.astype(jnp.float32)
+    return apply_group_scales(vals, e8m0_decode(s8), mx.group)
 
 
 def _a2a_sum(partial_f32, axis, n, dim, wire_dtype=jnp.bfloat16, cfg=None,
@@ -155,20 +175,23 @@ def _a2a_sum(partial_f32, axis, n, dim, wire_dtype=jnp.bfloat16, cfg=None,
     split = sh[dim] // n
     if mx is not None and sh[-1] % mx.group == 0 and (
             dim != partial_f32.ndim - 1 or split % mx.group == 0):
-        g = mx.group
+        # a split on the last (packed) axis lands on group boundaries
+        # (gated above), and a whole group is a whole number of packed
+        # bytes for every codec (32·w/8 ∈ {16, 24, 32} B) — so payload
+        # and grid always split along byte/code boundaries and the
+        # reshapes below follow each array's own last-axis length
         q, s8 = _quant_mx(partial_f32, mx)
         if dim == partial_f32.ndim - 1:
-            qp = q.reshape(*sh[:dim], n, split)
-            sp = s8.reshape(*sh[:-1], n, split // g)
+            qp = q.reshape(*q.shape[:-1], n, q.shape[-1] // n)
+            sp = s8.reshape(*s8.shape[:-1], n, s8.shape[-1] // n)
         else:
-            qp = q.reshape(*sh[:dim], n, split, *sh[dim + 1:])
-            sp = s8.reshape(*sh[:dim], n, split, *sh[dim + 1:-1],
-                            sh[-1] // g)
+            qp = q.reshape(*q.shape[:dim], n, split, *q.shape[dim + 1:])
+            sp = s8.reshape(*s8.shape[:dim], n, split, *s8.shape[dim + 1:])
         recv = jax.lax.all_to_all(qp, axis, split_axis=dim,
                                   concat_axis=dim, tiled=True)
         srecv = jax.lax.all_to_all(sp, axis, split_axis=dim,
                                    concat_axis=dim, tiled=True)
-        return jnp.sum(_deq_mx(recv, srecv, g), axis=dim)
+        return jnp.sum(_deq_mx(recv, srecv, mx), axis=dim)
     if cfg is not None and jnp.dtype(wire_dtype).itemsize == 1:
         assert dim == partial_f32.ndim - 2, (dim, sh)
         br = _fit_block(split, cfg.block_m)
@@ -250,18 +273,21 @@ def tp_applicable(x, rules, policy: Policy) -> bool:
     if not getattr(policy, "quantized", False) or x.ndim != 3:
         return False
     if getattr(policy, "mx_fwd", ""):
-        # MX policies ride the wire natively (DESIGN.md §9): fp8
-        # payloads + packed E8M0 byte grids on every collective —
+        # MX policies ride the wire natively (DESIGN.md §9/§10): narrow
+        # payloads (native fp8 bytes, or packed sub-byte codec lanes
+        # for MXFP6/4) + packed E8M0 byte grids on every collective —
         # provided the group structure survives the sharding.  Groups
         # run along contraction axes: K (fwd), N-shards (dgrad) and the
         # token axis (wgrad), so the feature dim and the sequence dim
-        # must both tile into whole groups, and the element formats
-        # need native one-byte dtypes for the payload to ship narrow.
-        fwd = get_mx_format(policy.mx_fwd)
-        bwd = get_mx_format(policy.mx_bwd_name)
-        if fwd.group != bwd.group:
-            return False
-        if fwd.elem.ml_dtype is None or bwd.elem.ml_dtype is None:
+        # must both tile into whole groups.  A whole group is a whole
+        # number of packed bytes for every codec, so group alignment
+        # subsumes pack alignment on the wire.  All four operand
+        # formats (fwd/bwd/wgrad pair) must share the group size.
+        fmts = [get_mx_format(n) for n in
+                (policy.mx_fwd, policy.mx_bwd_name,
+                 policy.mx_wgrad_act_name, policy.mx_wgrad_grad_name)]
+        fwd = fmts[0]
+        if len({f.group for f in fmts}) != 1:
             return False
         if x.shape[-1] % fwd.group or x.shape[1] % fwd.group:
             return False
@@ -472,15 +498,15 @@ def _tp_col_fwd_mx(x, w, policy, rules):
         wg = jax.lax.all_gather(wl, rules.fsdp_axis, axis=0, tiled=True)
         xq, sx8 = _quant_mx(xl, mxf)                  # groups along K
         wq, sw8 = _quant_mx(wg.T, mxf)                # w columns, along K
-        xg = jax.lax.all_gather(xq, axis, axis=1, tiled=True)   # fp8 wire
+        xg = jax.lax.all_gather(xq, axis, axis=1, tiled=True)   # narrow wire
         sg8 = jax.lax.all_gather(sx8, axis, axis=1, tiled=True)  # E8M0 bytes
         y = jnp.einsum("bsk,kn->bsn",
-                       _deq_mx(xg, sg8, g),
-                       _deq_mx(wq, sw8, g).T,
+                       _deq_mx(xg, sg8, mxf),
+                       _deq_mx(wq, sw8, mxf).T,
                        preferred_element_type=jnp.float32)
         return y.astype(cd), xq, sx8
 
-    # residuals: local fp8 payload + its E8M0 byte grid (weights are
+    # residuals: local narrow payload + its E8M0 byte grid (weights are
     # cheap to re-quantize in bwd; activations are not)
     y, xq, sx8 = fwd(x, w)
     return y, (xq, sx8, w)
@@ -490,16 +516,20 @@ def _tp_col_bwd_mx(policy, rules, res, g_ct):
     """dgrad: grads and weights re-quantize per-group along the local N
     columns (shard boundaries coincide with group boundaries — the
     ``tp_applicable`` divisibility gate), partials ship over the MX
-    a2a wire.  wgrad: the fwd payload is re-gathered (fp8 + byte grid),
-    dequantized, and both operands re-quantize per-group along the
-    *token* axis — the single-device wgrad grouping — with the raw
-    local cotangent used for the grad operand (no double rounding on
-    g; x carries the one fwd rounding the narrow wire implies, exactly
-    like the per-tensor path).  The ZeRO data reduction ships the same
-    fp8 + E8M0 wire."""
+    a2a wire.  wgrad: the fwd payload is re-gathered (packed bytes +
+    byte grid), dequantized, and both operands re-quantize per-group
+    along the *token* axis — the single-device wgrad grouping, in the
+    policy's wgrad formats (``mx_wgrad_*``: the FP8 master-wgrad pair
+    for the sub-byte policies) — with the raw local cotangent used for
+    the grad operand (no double rounding on g; x carries the one fwd
+    rounding the narrow wire implies, exactly like the per-tensor
+    path).  The ZeRO data reduction ships the same narrow + E8M0
+    wire."""
     ba, axis, tp = _axes(rules)
     mxf = get_mx_format(policy.mx_fwd)
     mxb = get_mx_format(policy.mx_bwd_name)
+    mxwa = get_mx_format(policy.mx_wgrad_act_name)
+    mxwg = get_mx_format(policy.mx_wgrad_grad_name)
     g = mxf.group
     xq, sx8, w = res
     cd = policy.compute_dtype
@@ -514,23 +544,23 @@ def _tp_col_bwd_mx(policy, rules, res, g_ct):
     def bwd(xql, sx8l, wl, gl):
         wg = jax.lax.all_gather(wl, rules.fsdp_axis, axis=0, tiled=True)
         # dgrad: contract over the local N columns; groups along N
-        gq, sg8 = _quant_mx(gl, mxb)                  # [B, S, Nl], E5M2
+        gq, sg8 = _quant_mx(gl, mxb)                  # [B, S, Nl], bwd fmt
         wqn, swn8 = _quant_mx(wg, mxf)                # w rows, along Nl
-        gf = _deq_mx(gq, sg8, g)
-        dpart = jnp.einsum("bsn,kn->bsk", gf, _deq_mx(wqn, swn8, g),
+        gf = _deq_mx(gq, sg8, mxb)
+        dpart = jnp.einsum("bsn,kn->bsk", gf, _deq_mx(wqn, swn8, mxf),
                            preferred_element_type=jnp.float32)
         dx = _a2a_sum(dpart, axis, tp, 1, mx=mxb).astype(cd)
-        # wgrad: re-gather the fp8 payload + byte grid; both operands
-        # re-group along the contracted token axis
+        # wgrad: re-gather the packed payload + byte grid; both operands
+        # re-group along the contracted token axis in the wgrad formats
         xg = jax.lax.all_gather(xql, axis, axis=1, tiled=True)
         sxg8 = jax.lax.all_gather(sx8l, axis, axis=1, tiled=True)
-        xf = _deq_mx(xg, sxg8, g)                     # [B, S, K] f32
-        xqt, sxt8 = _quant_mx(xf.transpose(0, 2, 1), mxf)   # [B, K, S]
-        gqt, sgt8 = _quant_mx(gl.transpose(0, 2, 1), mxb)   # [B, Nl, S]
+        xf = _deq_mx(xg, sxg8, mxf)                   # [B, S, K] f32
+        xqt, sxt8 = _quant_mx(xf.transpose(0, 2, 1), mxwa)  # [B, K, S]
+        gqt, sgt8 = _quant_mx(gl.transpose(0, 2, 1), mxwg)  # [B, Nl, S]
         dwl = jnp.einsum("bks,bns->kn",
-                         _deq_mx(xqt, sxt8, g), _deq_mx(gqt, sgt8, g),
+                         _deq_mx(xqt, sxt8, mxwa), _deq_mx(gqt, sgt8, mxwg),
                          preferred_element_type=jnp.float32)
-        dw = _grad_reduce_data(dwl, rules, mx=mxb).astype(cd)
+        dw = _grad_reduce_data(dwl, rules, mx=mxwg).astype(cd)
         return dx, dw
 
     dx, dw = bwd(xq, sx8, w, g_ct)
@@ -720,7 +750,7 @@ def _tp_row_fwd_mx(x, w, policy, rules):
         xq, sx8 = _quant_mx(xl, mxf)                  # groups along Nl
         wq, sw8 = _quant_mx(wg.T, mxf)                # [K, Nl], along Nl
         part = jnp.einsum("bsn,kn->bsk",
-                          _deq_mx(xq, sx8, g), _deq_mx(wq, sw8, g),
+                          _deq_mx(xq, sx8, mxf), _deq_mx(wq, sw8, mxf),
                           preferred_element_type=jnp.float32)
         y = _a2a_sum(part, axis, tp, 1, mx=mxf)
         return y.astype(cd), xq, sx8
@@ -736,11 +766,13 @@ def _tp_row_bwd_mx(policy, rules, res, g_ct):
     operands re-group along the contracted token axis — x from its
     fwd-quantized payload (one wire rounding), g from the gathered
     wire payload (same one rounding the per-tensor path takes) — and
-    the ZeRO data reduction ships fp8 + E8M0 bytes, falling back to
-    bf16 only if the FSDP split breaks group alignment."""
+    the ZeRO data reduction ships narrow payloads + E8M0 bytes, falling
+    back to bf16 only if the FSDP split breaks group alignment."""
     ba, axis, tp = _axes(rules)
     mxf = get_mx_format(policy.mx_fwd)
     mxb = get_mx_format(policy.mx_bwd_name)
+    mxwa = get_mx_format(policy.mx_wgrad_act_name)
+    mxwg = get_mx_format(policy.mx_wgrad_grad_name)
     g = mxf.group
     xq, sx8, w = res
     cd = policy.compute_dtype
@@ -754,22 +786,23 @@ def _tp_row_bwd_mx(policy, rules, res, g_ct):
         axis_names=manual, check_vma=False)
     def bwd(xql, sx8l, wl, gl):
         wg = jax.lax.all_gather(wl, rules.fsdp_axis, axis=1, tiled=True)
-        gq, sg8 = _quant_mx(gl, mxb)                  # [B, Sl, K], E5M2
-        gg = jax.lax.all_gather(gq, axis, axis=1, tiled=True)    # fp8 wire
+        gq, sg8 = _quant_mx(gl, mxb)                  # [B, Sl, K], bwd fmt
+        gg = jax.lax.all_gather(gq, axis, axis=1, tiled=True)   # narrow wire
         sgg8 = jax.lax.all_gather(sg8, axis, axis=1, tiled=True)  # bytes
-        gf = _deq_mx(gg, sgg8, g)                     # [B, S, K] f32
+        gf = _deq_mx(gg, sgg8, mxb)                   # [B, S, K] f32
         wqk, swk8 = _quant_mx(wg, mxf)                # w rows, along K
-        dx = jnp.einsum("bsk,nk->bsn", gf, _deq_mx(wqk, swk8, g),
+        dx = jnp.einsum("bsk,nk->bsn", gf, _deq_mx(wqk, swk8, mxf),
                         preferred_element_type=jnp.float32).astype(cd)
         # wgrad: re-group both operands along the contracted token axis
-        xf = _deq_mx(xql, sx8l, g)                    # [B, S, Nl] f32
-        xqt, sxt8 = _quant_mx(xf.transpose(0, 2, 1), mxf)   # [B, Nl, S]
-        gqt, sgt8 = _quant_mx(gf.transpose(0, 2, 1), mxb)   # [B, K, S]
+        # in the policy's wgrad formats
+        xf = _deq_mx(xql, sx8l, mxf)                  # [B, S, Nl] f32
+        xqt, sxt8 = _quant_mx(xf.transpose(0, 2, 1), mxwa)  # [B, Nl, S]
+        gqt, sgt8 = _quant_mx(gf.transpose(0, 2, 1), mxwg)  # [B, K, S]
         dwl = jnp.einsum("bns,bks->nk",
-                         _deq_mx(xqt, sxt8, g), _deq_mx(gqt, sgt8, g),
+                         _deq_mx(xqt, sxt8, mxwa), _deq_mx(gqt, sgt8, mxwg),
                          preferred_element_type=jnp.float32)
         # ZeRO reduce over data lands on dim1 (w is [N_model, K_fsdp])
-        dw = _grad_reduce_data(dwl, rules, dim=1, mx=mxb)
+        dw = _grad_reduce_data(dwl, rules, dim=1, mx=mxwg)
         return dx, dw.astype(cd)
 
     dx, dw = bwd(xq, sx8, w, g_ct)

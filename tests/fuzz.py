@@ -78,3 +78,56 @@ def group_structured(rng, m: int, k: int, group: int, emax: int = 12,
 def all_bit_patterns(fmt) -> np.ndarray:
     """Every encoding of ``fmt`` as uint64 (2**width patterns)."""
     return np.arange(1 << fmt.width, dtype=np.uint64)
+
+
+def fp6_lanes(rng, n: int = 4096) -> np.ndarray:
+    """Deterministic sample of FP6 3-byte lanes as uint8 ``[L, 3]``.
+
+    The structured part covers the lane-boundary cases exhaustively:
+    every 4-tuple over the boundary code set (all-zero / all-one fields,
+    the code that straddles each byte seam: 0x00, 0x01, 0x20, 0x2A,
+    0x15, 0x3F) — 6^4 = 1296 lanes whose bits exercise every shift in
+    the 4-in-3-bytes layout — plus ``n`` uniformly random lanes.  A
+    nightly job sweeps all 2^24 lanes (tests/test_pack.py ``slow``);
+    this sample keeps the tier-1 suite cheap without losing the seams.
+    """
+    import itertools
+    boundary = np.asarray([0x00, 0x01, 0x20, 0x2A, 0x15, 0x3F], np.uint8)
+    quads = np.asarray(list(itertools.product(boundary, repeat=4)),
+                       np.uint8)
+    rand = rng.integers(0, 64, (n, 4)).astype(np.uint8)
+    codes = np.concatenate([quads, rand])
+    c = codes.astype(np.uint32)
+    v = c[:, 0] | (c[:, 1] << 6) | (c[:, 2] << 12) | (c[:, 3] << 18)
+    return np.stack([v & 0xFF, (v >> 8) & 0xFF, (v >> 16) & 0xFF],
+                    -1).astype(np.uint8)
+
+
+def exact_mx_operands(rng, m, k, n, mx, span=16, specials=True):
+    """GEMM operands on which every fp32 intermediate is exact.
+
+    A: per-(row × group) pow2 magnitudes 2^U[-span/2, span/2] (the first
+    row is pinned to the full 2^span dynamic range) times small-int
+    grids, with each group's amax pinned to the largest power of two at
+    or below the element max (in (max/2, max], so the recovered E8M0
+    scale is exactly the chosen pow2).  One group is poisoned with
+    inf/NaN.  B: small ints, supported only on group ``j % G`` per
+    column ``j`` — every output element then accumulates 32 products
+    that share one scale class, so f32 sums are exact in any order.
+    """
+    import math
+    g, G = mx.group, k // mx.group
+    pin = 2.0 ** math.floor(math.log2(mx.elem.max_normal))
+    ea = rng.integers(-span // 2, span // 2 + 1, (m, G)).astype(np.float64)
+    ea[0, 0], ea[0, 1] = -span // 2, span // 2
+    qa = rng.integers(-2, 3, (m, k)).astype(np.float64)
+    qa[:, ::g] = pin * np.sign(rng.integers(0, 2, (m, G)) * 2 - 1)
+    a = qa * np.repeat(2.0 ** ea, g, axis=1)
+    if specials:
+        a[1, g:2 * g] = np.inf
+        a[1, g + 3] = np.nan
+    b = np.zeros((k, n))
+    for j in range(n):
+        gj = j % G
+        b[gj * g:(gj + 1) * g, j] = rng.integers(-2, 3, g)
+    return a, b

@@ -1,0 +1,262 @@
+"""Payload codec layer (DESIGN.md §10): one codec from HBM to MACs.
+
+Four layers:
+
+1. codec object invariants: shape math, storage dtype, pack alignment,
+   compiled-TPU lane units;
+2. **in-kernel decode ≡ numpy oracle**: ``codec.decode_lanes`` run
+   *inside a Pallas kernel* (interpret mode — the same function the
+   packed GEMM inlines) against ``unpack_codes_np`` + ``decode_np`` for
+   every FP4 payload byte (256), every FP8 code (256), and the
+   deterministic FP6 3-byte lane sample from ``tests/fuzz.py`` (all
+   boundary-code quads + random lanes; the full 2^24 sweep is the
+   nightly ``slow`` job in test_pack.py);
+3. the packed quantize kernel emits byte-identical payloads to the
+   XLA-edge pack of the value-space path, for all five MX formats;
+4. the packed-ref Pallas GEMM is bit-exact vs ``ops.mx_gemm`` on
+   exact-arithmetic operands, including ragged (odd M / non-group K)
+   shapes, which pad-and-mask instead of erroring.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.experimental import pallas as pl
+
+import fuzz
+from repro.core import formats as F
+from repro.kernels import ops
+from repro.kernels import pack as P
+from repro.kernels.codec import get_codec
+
+MX_NAMES = list(F.MX_FORMATS)
+FMT_NAMES = ["fp8", "fp8alt", "fp6e2m3", "fp6e3m2", "fp4e2m1"]
+
+
+# -------------------------------------------------------- codec object ----
+
+def test_codec_table():
+    for name, want in [("fp4e2m1", (4, 2, 1, 256)),
+                       ("fp6e2m3", (6, 4, 3, 512)),
+                       ("fp6e3m2", (6, 4, 3, 512)),
+                       ("fp8", (8, 1, 1, 128)),
+                       ("fp8alt", (8, 1, 1, 128))]:
+        c = get_codec(name)
+        assert (c.width, c.pack_align, c.word_bytes, c.lane_unit) == want, name
+        assert c.elems_per_word == c.pack_align
+        assert c.storage_dtype == jnp.uint8
+        # lane_unit really is the packed-lane legality floor
+        assert c.packed_cols(c.lane_unit) % 128 == 0
+    # accepts names, formats, MX formats; caches by format
+    assert get_codec("fp4e2m1") is get_codec(F.FP4E2M1)
+    assert get_codec(F.MXFP4E2M1) is get_codec("fp4e2m1")
+    assert get_codec(get_codec("fp8")) is get_codec("fp8")
+
+
+def test_codec_shape_math():
+    c4, c6 = get_codec("fp4e2m1"), get_codec("fp6e2m3")
+    assert c4.packed_cols(64) == 32 and c6.packed_cols(64) == 48
+    assert c4.logical_cols(32) == 64 and c6.logical_cols(48) == 64
+    assert c4.pad_cols(7) == 8 and c6.pad_cols(7) == 8
+    with pytest.raises(AssertionError):
+        c6.packed_cols(6)      # not pack-aligned
+
+
+# ------------------------------------- in-kernel decode ≡ numpy oracle ----
+
+def _decode_in_kernel(codec, payload):
+    """Run codec.decode_lanes INSIDE a Pallas kernel (interpret mode) —
+    the exact code path the packed GEMM uses for its in-register
+    unpack+decode."""
+    def kern(p_ref, o_ref):
+        o_ref[...] = codec.decode_lanes(p_ref[...])
+
+    rows, nbytes = payload.shape
+    out = pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((rows, codec.logical_cols(nbytes)),
+                                       jnp.float32),
+        interpret=True,
+    )(jnp.asarray(payload))
+    return np.asarray(out, np.float64)
+
+
+def test_fp4_in_kernel_decode_all_256_bytes():
+    """Every FP4 payload byte decodes in-kernel to exactly what the
+    pack.py + formats numpy oracles say."""
+    codec = get_codec("fp4e2m1")
+    payload = np.arange(256, dtype=np.uint8).reshape(2, 128)
+    got = _decode_in_kernel(codec, payload)
+    want = codec.unpack_decode_np(payload)
+    np.testing.assert_array_equal(got, want)
+    # and the oracle is what pack.py + decode_np compose to
+    np.testing.assert_array_equal(
+        want, F.decode_np(P.unpack4_np(payload), F.FP4E2M1))
+
+
+@pytest.mark.parametrize("name", ["fp8", "fp8alt"])
+def test_fp8_in_kernel_decode_all_256_codes(name):
+    codec = get_codec(name)
+    payload = np.arange(256, dtype=np.uint8).reshape(2, 128)
+    got = _decode_in_kernel(codec, payload)
+    want = codec.unpack_decode_np(payload)
+    np.testing.assert_array_equal(np.isnan(got), np.isnan(want))
+    np.testing.assert_array_equal(got[~np.isnan(got)], want[~np.isnan(want)])
+
+
+@pytest.mark.parametrize("name", ["fp6e2m3", "fp6e3m2"])
+def test_fp6_in_kernel_decode_lane_sample(name):
+    """Deterministic FP6 lane sample (every boundary-code quad + random
+    lanes from tests/fuzz.py): in-kernel decode ≡ numpy oracle.  The
+    exhaustive 2^24 lane sweep runs nightly (test_pack.py, slow)."""
+    codec = get_codec(name)
+    lanes = fuzz.fp6_lanes(np.random.default_rng(40), n=4096)
+    payload = lanes.reshape(-1, 48)            # 16 lanes / 48 B per row
+    got = _decode_in_kernel(codec, payload)
+    want = codec.unpack_decode_np(payload)
+    np.testing.assert_array_equal(got, want)
+    np.testing.assert_array_equal(
+        want, F.decode_np(P.unpack6_np(payload), codec.fmt))
+
+
+@pytest.mark.parametrize("name", FMT_NAMES)
+def test_encode_pack_round_trip_vs_oracle(name):
+    """encode_lanes (jnp) ≡ encode_pack_np on fuzzed values incl. every
+    format boundary, and decode inverts it on the representable set."""
+    codec = get_codec(name)
+    vals = fuzz.sample(np.random.default_rng(41), codec.fmt, 512)
+    vals = vals[:codec.pad_cols(len(vals)) - codec.pack_align]  # align
+    got = np.asarray(codec.encode_lanes(jnp.asarray(vals)))
+    want = codec.encode_pack_np(vals)
+    np.testing.assert_array_equal(got, want)
+    back = codec.unpack_decode_np(want)
+    rep = np.asarray(F.quantize_np(vals.astype(np.float64), codec.fmt))
+    if codec.fmt.ieee_specials:
+        np.testing.assert_array_equal(np.isnan(back), np.isnan(rep))
+        mask = ~np.isnan(rep)
+    else:
+        # no-specials formats have no NaN encoding: a NaN value encodes
+        # to the max-magnitude pattern (the MX group scale carries the
+        # NaN instead) — decode round-trips the finite set only
+        mask = np.isfinite(vals)
+        assert (np.abs(back[np.isnan(vals)]) == codec.fmt.max_normal).all()
+    np.testing.assert_array_equal(back[mask], rep[mask])
+
+
+# ---------------------------------------- packed quantize kernel ≡ xla ----
+
+@pytest.mark.parametrize("name", MX_NAMES)
+def test_packed_quantize_kernel_matches_xla_edge_pack(name):
+    """The Pallas packed quantize kernel emits byte-identical payloads
+    and scale codes to the XLA-path quantize + pack — on arbitrary data
+    including an all-zero group, an inf group and a NaN group."""
+    x = jnp.asarray(fuzz.group_structured(np.random.default_rng(42), 24,
+                                          160, 32))
+    p1, s1 = ops.mx_quantize(x, name, impl="xla", packed=True)
+    p2, s2 = ops.mx_quantize(x, name, impl="pallas_interpret", packed=True)
+    assert p1.dtype == p2.dtype == jnp.uint8
+    assert s1.dtype == s2.dtype == jnp.uint8
+    np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    # the true footprint: width/8 bytes per element, one byte per group
+    mx = F.get_mx_format(name)
+    assert p1.shape == (24, 160 * mx.elem.width // 8)
+    assert s1.shape == (24, 5)
+
+
+# ------------------------------------------- packed GEMM ≡ ops.mx_gemm ----
+
+@pytest.mark.parametrize("name", MX_NAMES)
+@pytest.mark.parametrize("impl", ["pallas_interpret", "xla"])
+def test_packed_gemm_bit_exact_vs_mx_gemm(name, impl):
+    """The acceptance-criteria workload: packed-ref GEMM (in-kernel
+    unpack/decode next to the E8M0 dequant) == the fused value-path
+    ``ops.mx_gemm`` bit for bit on exact-arithmetic operands with
+    per-group dynamic range 2^16 and a poisoned (inf/NaN) group."""
+    mx = F.get_mx_format(name)
+    m, k, n = 16, 128, 48
+    a, b = fuzz.exact_mx_operands(np.random.default_rng(43), m, k, n, mx)
+    aj = jnp.asarray(a, jnp.float32)
+    bj = jnp.asarray(b, jnp.float32)
+    want = ops.mx_gemm(aj, bj, mx_a=name, impl="xla")
+    ap, sa8 = ops.mx_quantize(aj, name, impl="xla", packed=True)
+    bp, sb8 = ops.mx_quantize(bj.T, name, impl="xla", packed=True)
+    got = ops.mx_gemm_packed(ap, sa8, bp, sb8, mx_a=name, impl=impl)
+    assert got.shape == (m, n)
+    np.testing.assert_array_equal(np.asarray(want, np.float64),
+                                  np.asarray(got, np.float64))
+    assert np.isnan(np.asarray(want)[1]).all()   # poison row survives
+
+
+def test_packed_gemm_mixed_formats_batched():
+    """E2M3 acts × E5M2 grads (the mxfp6 dgrad pairing) from packed
+    storage, with leading batch dims, bit-exact vs the value path."""
+    mx_a, mx_b = F.MXFP6E2M3, F.MXFP8E5M2
+    rng = np.random.default_rng(44)
+    a = jnp.asarray(rng.integers(-2, 3, (3, 8, 64)), jnp.float32)
+    b = jnp.asarray(rng.integers(-2, 3, (64, 24)), jnp.float32)
+    want = ops.mx_gemm(a, b, mx_a=mx_a, mx_b=mx_b, impl="xla")
+    ap, sa8 = ops.mx_quantize(a, mx_a, impl="xla", packed=True)
+    bp, sb8 = ops.mx_quantize(b.T, mx_b, impl="xla", packed=True)
+    for impl in ("xla", "pallas_interpret"):
+        got = ops.mx_gemm_packed(ap, sa8, bp, sb8, mx_a=mx_a, mx_b=mx_b,
+                                 impl=impl)
+        assert got.shape == (3, 8, 24)
+        np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+# -------------------------------------------------- ragged shapes (§10) ----
+
+@pytest.mark.parametrize("name", MX_NAMES)
+@pytest.mark.parametrize("shape", [(10, 70, 24), (7, 33, 8)], ids=str)
+def test_packed_pipeline_ragged_m_and_k(name, shape):
+    """Shapes not divisible by the group / pack unit pad-and-mask inside
+    the packed path: quantize pads K to whole groups (zero payload,
+    neutral scale — exactly what ``ops.mx_gemm``'s own padding does),
+    the GEMM's padded contributions are identically zero, and
+    ``mx_unpack(k=...)`` slices the logical tail back.  Bit-exact vs
+    the fused value path on small-int (exact-arithmetic) operands."""
+    m, k, n = shape
+    rng = np.random.default_rng(45)
+    a = jnp.asarray(rng.integers(-2, 3, (m, k)), jnp.float32)
+    b = jnp.asarray(rng.integers(-2, 3, (k, n)), jnp.float32)
+    want = ops.mx_gemm(a, b, mx_a=name, impl="xla")   # pads K internally
+    ap, sa8 = ops.mx_quantize(a, name, impl="xla", packed=True)
+    bp, sb8 = ops.mx_quantize(b.T, name, impl="xla", packed=True)
+    mx = F.get_mx_format(name)
+    kg = k + (-k) % mx.group
+    assert sa8.shape == (m, kg // mx.group)
+    assert ap.shape == (m, kg * mx.elem.width // 8)
+    for impl in ("xla", "pallas_interpret"):
+        got = ops.mx_gemm_packed(ap, sa8, bp, sb8, mx_a=name, impl=impl)
+        assert got.shape == (m, n)
+        np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+    # the lossless round trip, sliced back to the logical K
+    back = ops.mx_dequantize_packed(ap, sa8, name, k=k)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(a))
+
+
+@pytest.mark.parametrize("impl", ["pallas_interpret", "xla"])
+def test_packed_quantize_ragged_matches_value_path(impl):
+    """Packed quantize on ragged K == pack(value-path quantize of the
+    group-padded input), for both impls."""
+    rng = np.random.default_rng(46)
+    x = jnp.asarray(rng.normal(0, 4, (10, 70)), jnp.float32)
+    xpad = jnp.pad(x, ((0, 0), (0, 26)))
+    for name in MX_NAMES:
+        p, s8 = ops.mx_quantize(x, name, impl=impl, packed=True)
+        q, s = ops.mx_quantize(xpad, name, impl="xla")
+        np.testing.assert_array_equal(np.asarray(p),
+                                      np.asarray(ops.mx_pack(q, name)))
+        np.testing.assert_array_equal(np.asarray(s8),
+                                      np.asarray(F.e8m0_encode(s)))
+
+
+def test_mx_pack_ragged_pads_to_alignment():
+    """mx_pack itself accepts a K that is not pack-aligned (satellite:
+    pad-and-mask instead of erroring)."""
+    q = jnp.asarray([[1.0, -1.0, 0.5, 2.0, 1.5]], jnp.float32)  # K=5
+    p = ops.mx_pack(q, "mxfp4e2m1")
+    assert p.shape == (1, 3)                    # ceil(5/2) bytes
+    back = ops.mx_unpack(p, "mxfp4e2m1", k=5)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(q))

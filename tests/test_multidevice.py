@@ -401,3 +401,119 @@ def test_elastic_restore_onto_mesh():
         print("ELASTIC_OK")
     """))
     assert "ELASTIC_OK" in out
+
+
+def test_mxfp6_train_step_tp_matches_gspmd():
+    """mxfp6 (DESIGN.md §10) runs a real train step through
+    models/layers.py on BOTH distribution paths: sequence-parallel
+    rules route the group-aligned projections onto the explicit TP
+    wire (packed sub-byte payloads + E8M0 byte grids — asserted via a
+    proj() spy), plain rules keep them under GSPMD over the packed MX
+    pipeline, and the two agree on the losses."""
+    out = _run(textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.compat import make_mesh, set_mesh
+        from repro.configs.base import ModelConfig
+        from repro.models import build_model
+        import repro.models.layers as L
+        from repro.optim.adamw import AdamWConfig
+        from repro.parallel.sharding import make_rules
+        from repro.train.train_step import make_train_state, make_train_step
+
+        cfg = ModelConfig(
+            name="sub-byte-mxfp6", family="dense", n_layers=1,
+            d_model=64, n_heads=2, n_kv_heads=2, d_ff=128,
+            vocab_size=64, head_dim=32, policy_name="mxfp6",
+            attn_q_chunk=32)
+        mesh = make_mesh((2, 2), ("data", "model"))
+        model = build_model(cfg)
+        opt = AdamWConfig(lr=1e-3, warmup_steps=1, schedule="constant")
+        toks = jnp.asarray(np.random.default_rng(0).integers(0, 64, (4, 32)))
+
+        def losses(rules, steps=2):
+            state = make_train_state(model, jax.random.key(0), opt)
+            step = jax.jit(make_train_step(model, opt, rules=rules,
+                                           impl="xla"))
+            out = []
+            with set_mesh(mesh):
+                for _ in range(steps):
+                    state, m = step(state, toks)
+                    out.append(float(m["loss"]))
+            return out
+
+        hits = []
+        orig = L.tp_column_linear
+        L.tp_column_linear = (lambda *a, **k:
+                              (hits.append(1), orig(*a, **k))[1])
+        try:
+            l_tp = losses(make_rules(mesh, seq_shard=True))
+        finally:
+            L.tp_column_linear = orig
+        assert hits, "proj() did not route mxfp6 to the TP wire"
+        l_g = losses(make_rules(mesh))
+        assert all(np.isfinite(l_tp)) and all(np.isfinite(l_g))
+        np.testing.assert_allclose(l_tp, l_g, rtol=0.05, atol=0.05)
+        print("TP", l_tp, "GSPMD", l_g)
+        print("MXFP6_TP_OK")
+    """))
+    assert "MXFP6_TP_OK" in out
+
+
+def test_mxfp4_train_step_and_misaligned_fallback():
+    """mxfp4 takes the explicit TP wire on group-aligned shapes and
+    trains (finite losses); a group-MISALIGNED model (seq % 32 != 0)
+    refuses the wire — proj() spy never fires — and still trains via
+    the GSPMD fallback."""
+    out = _run(textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.compat import make_mesh, set_mesh
+        from repro.configs.base import ModelConfig
+        from repro.models import build_model
+        import repro.models.layers as L
+        from repro.optim.adamw import AdamWConfig
+        from repro.parallel.sharding import make_rules
+        from repro.train.train_step import make_train_state, make_train_step
+
+        def run(seq):
+            cfg = ModelConfig(
+                name="sub-byte-mxfp4", family="dense", n_layers=1,
+                d_model=64, n_heads=2, n_kv_heads=2, d_ff=128,
+                vocab_size=64, head_dim=32, policy_name="mxfp4",
+                attn_q_chunk=seq)
+            mesh = make_mesh((2, 2), ("data", "model"))
+            model = build_model(cfg)
+            opt = AdamWConfig(lr=1e-3, warmup_steps=1, schedule="constant")
+            state = make_train_state(model, jax.random.key(0), opt)
+            rules = make_rules(mesh, seq_shard=True)
+            step = jax.jit(make_train_step(model, opt, rules=rules,
+                                           impl="xla"))
+            toks = jnp.asarray(
+                np.random.default_rng(0).integers(0, 64, (4, seq)))
+            hits = []
+            orig = L.tp_column_linear
+            L.tp_column_linear = (lambda *a, **k:
+                                  (hits.append(1), orig(*a, **k))[1])
+            try:
+                with set_mesh(mesh):
+                    losses = []
+                    for _ in range(2):
+                        state, m = step(state, toks)
+                        losses.append(float(m["loss"]))
+            finally:
+                L.tp_column_linear = orig
+            return losses, bool(hits)
+
+        l_ok, wired = run(32)          # seq 32: whole groups -> TP wire
+        assert wired, "aligned mxfp4 did not take the TP wire"
+        assert all(np.isfinite(l_ok)), l_ok
+        l_mis, wired_mis = run(24)     # seq 24: no whole groups
+        assert not wired_mis, "misaligned shapes took the wire"
+        assert all(np.isfinite(l_mis)), l_mis
+        print("OK", l_ok, "MIS", l_mis)
+        print("MXFP4_TP_OK")
+    """))
+    assert "MXFP4_TP_OK" in out

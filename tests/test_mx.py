@@ -184,33 +184,9 @@ def test_mx_quantize_ragged_and_batched():
 
 # --------------------------------------------------- fused GEMM kernel ----
 
-def _exact_mx_operands(rng, m, k, n, mx, span=16, specials=True):
-    """Operands on which every fp32 intermediate is exact.
-
-    A: per-(row × group) pow2 magnitudes 2^U[-span/2, span/2] (the first
-    row is pinned to the full 2^span dynamic range) times small-int
-    grids, with each group's amax pinned to the largest power of two at
-    or below the element max (in (max/2, max], so the recovered E8M0
-    scale is exactly the chosen pow2).  One group is poisoned with
-    inf/NaN.  B: small ints, supported only on group ``j % G`` per
-    column ``j`` — every output element then accumulates 32 products
-    that share one scale class, so f32 sums are exact in any order.
-    """
-    g, G = mx.group, k // mx.group
-    pin = 2.0 ** math.floor(math.log2(mx.elem.max_normal))
-    ea = rng.integers(-span // 2, span // 2 + 1, (m, G)).astype(np.float64)
-    ea[0, 0], ea[0, 1] = -span // 2, span // 2
-    qa = rng.integers(-2, 3, (m, k)).astype(np.float64)
-    qa[:, ::g] = pin * np.sign(rng.integers(0, 2, (m, G)) * 2 - 1)
-    a = qa * np.repeat(2.0 ** ea, g, axis=1)
-    if specials:
-        a[1, g:2 * g] = np.inf
-        a[1, g + 3] = np.nan
-    b = np.zeros((k, n))
-    for j in range(n):
-        gj = j % G
-        b[gj * g:(gj + 1) * g, j] = rng.integers(-2, 3, g)
-    return a, b
+# exact-arithmetic operand construction lives in tests/fuzz.py so the
+# codec harness (test_codec.py) shares the same generator
+_exact_mx_operands = fuzz.exact_mx_operands
 
 
 def _oracle_mx_gemm(a, b, mx_a, mx_b, out_fmt):
@@ -477,3 +453,91 @@ def test_mxfp8_nonfinite_reaches_loss_scale_skip():
     _, new_state, skip = check_and_update_scale(state, {"w": g})
     assert bool(skip)
     assert float(new_state["scale"]) < float(state["scale"])
+
+
+# ----------------------------------------- sub-byte policies (§10) --------
+
+def test_mxfp6_mxfp4_policy_wiring():
+    from repro.core.policy import get_policy
+    p6 = get_policy("mxfp6")
+    assert p6.mx and p6.quantized and p6.loss_scaling
+    assert p6.mx_fwd == "mxfp6e2m3" and p6.mx_bwd_name == "mxfp6e3m2"
+    # FP8 master wgrad: the weight-gradient GEMM runs the MXFP8 pair
+    assert p6.mx_wgrad_act_name == "mxfp8e4m3"
+    assert p6.mx_wgrad_grad_name == "mxfp8e5m2"
+    p4 = get_policy("mxfp4")
+    assert p4.mx_fwd == "mxfp4e2m1" and p4.mx_bwd_name == "mxfp8e5m2"
+    assert p4.mx_wgrad_act_name == "mxfp8e4m3"
+    assert p4.mx_wgrad_grad_name == "mxfp8e5m2"
+    # mxfp8 defaults: wgrad falls back to the fwd/bwd pair (unchanged)
+    p8 = get_policy("mxfp8")
+    assert p8.mx_wgrad_act_name == "mxfp8e4m3"
+    assert p8.mx_wgrad_grad_name == "mxfp8e5m2"
+    for p in (p6, p4):
+        assert p.block_cfg is None            # MX path, not block path
+
+
+@pytest.mark.parametrize("pname,tol", [("mxfp6", 0.05), ("mxfp4", 0.35)])
+def test_qlinear_sub_byte_policy_end_to_end(pname, tol):
+    """mxfp6/mxfp4 run a real fwd+bwd through the packed pipeline:
+    finite, and the loss lands within the element format's precision of
+    the unquantized bf16 loss (E2M3 keeps ~4 significant bits, E2M1
+    ~2 — hence the per-policy tolerance)."""
+    from repro.core.linear import qlinear
+    from repro.core.policy import get_policy
+    rng = np.random.default_rng(31)
+    pol = get_policy(pname)
+    x = jnp.asarray(rng.normal(0, 1, (2, 64, 96)), jnp.bfloat16)
+    w = jnp.asarray(rng.normal(0, 0.3, (96, 64)), jnp.bfloat16)
+
+    def loss(pol):
+        def f(x, w):
+            return (qlinear(x, w, pol, impl="xla")
+                    .astype(jnp.float32) ** 2).sum()
+        return jax.jit(jax.value_and_grad(f, (0, 1)))
+
+    vq, gq = loss(pol)(x, w)
+    vr, _ = loss(get_policy("bf16"))(x, w)
+    assert np.isfinite(float(vq))
+    assert all(bool(jnp.isfinite(g).all()) for g in gq)
+    assert abs(float(vq) - float(vr)) / abs(float(vr)) < tol, (vq, vr)
+
+
+def test_qlinear_sub_byte_ragged_k():
+    """Ragged K (not a whole number of groups / pack units) pads and
+    masks inside the packed pipeline instead of erroring."""
+    from repro.core.linear import qlinear
+    from repro.core.policy import get_policy
+    rng = np.random.default_rng(32)
+    x = jnp.asarray(rng.normal(0, 1, (3, 10, 70)), jnp.bfloat16)
+    w = jnp.asarray(rng.normal(0, 0.3, (70, 24)), jnp.bfloat16)
+    for pname in ("mxfp6", "mxfp4"):
+        pol = get_policy(pname)
+        v, grads = jax.value_and_grad(
+            lambda x, w: (qlinear(x, w, pol, impl="xla")
+                          .astype(jnp.float32) ** 2).sum(), (0, 1))(x, w)
+        assert np.isfinite(float(v))
+        for gr, ref_arr in zip(grads, (x, w)):
+            assert gr.shape == ref_arr.shape
+            assert bool(jnp.isfinite(gr).all())
+
+
+def test_sub_byte_policies_ride_tp_wire_when_aligned():
+    """mxfp6/mxfp4 take the explicit TP wire on group-aligned shapes —
+    the packed codec makes sub-byte payloads shippable (PR 4 gated them
+    off for lacking a native one-byte dtype) — and fall back to GSPMD
+    when the group structure doesn't survive the sharding."""
+    import types
+    from repro.core.policy import get_policy
+    from repro.parallel.tp_gemm import tp_applicable
+    mesh = types.SimpleNamespace(shape={"data": 2, "model": 4},
+                                 axis_names=("data", "model"))
+    rules = types.SimpleNamespace(mesh=mesh, seq_shard=True,
+                                  model_axis="model", model_size=4,
+                                  fsdp_axis="data", batch_axes=("data",))
+    xa = jnp.zeros((2, 32, 64))
+    xm = jnp.zeros((2, 8, 16))     # K=16, S=8: no whole groups
+    for pname in ("mxfp6", "mxfp4"):
+        pol = get_policy(pname)
+        assert tp_applicable(xa, rules, pol) is True, pname
+        assert tp_applicable(xm, rules, pol) is False, pname

@@ -43,10 +43,13 @@ def test_fp4_all_code_pairs_round_trip():
     np.testing.assert_array_equal(P.unpack4_np(P.pack4_np(c)), c)
 
 
+@pytest.mark.exhaustive
 def test_fp6_all_3byte_lanes_round_trip():
     """Every possible 3-byte lane (2^24 of them): unpack to four 6-bit
     codes and repack — identity, so no bit of the lane is lost or
-    aliased."""
+    aliased.  ``exhaustive``: these sweeps run in the nightly CI leg;
+    tier-1 covers the boundary-lane sample (tests/test_codec.py via
+    ``fuzz.fp6_lanes``)."""
     v = np.arange(2 ** 24, dtype=np.uint32)
     lanes = np.stack([v & 0xFF, (v >> 8) & 0xFF, (v >> 16) & 0xFF],
                      -1).astype(np.uint8)
@@ -55,6 +58,7 @@ def test_fp6_all_3byte_lanes_round_trip():
     np.testing.assert_array_equal(P.pack6_np(codes), lanes)
 
 
+@pytest.mark.exhaustive
 def test_fp6_all_code_quads_round_trip():
     c = np.arange(2 ** 24, dtype=np.uint32)
     quads = np.stack([(c >> (6 * i)) & 0x3F for i in range(4)],
