@@ -23,9 +23,15 @@ emit and consume.  FP4 payload buffers must measure 0.5 B/elem (FP6
 0.75) end to end; no byte-wide intermediate exists between quantize
 and GEMM.
 
+A fourth section (``attn_kv``) measures the packed attention-KV tiles
+(DESIGN.md §11): the k + v payload + scale bytes the flash sweep
+streams per layer under each MX policy's ``mx_attn`` format — mxfp4 KV
+must measure 0.53125 B/elem, same arithmetic as the GEMM payloads but
+with groups along the head dimension.
+
 This doubles as CI's regression gate: ``--check BASELINE`` fails
-(exit 1) if any policy's wire bytes — or its packed-pipeline HBM bytes
-— regress >10% over the committed baseline
+(exit 1) if any policy's wire bytes — or its packed-pipeline HBM /
+packed-KV bytes — regress >10% over the committed baseline
 (``benchmarks/baselines/wire_bytes.json``).
 
 Run:
@@ -151,6 +157,28 @@ def measure(quick=False):
             bufs["fwd_act"][0].size + bufs["fwd_act"][1].size) / elems_fwd
         rec["total_bytes"] = total
         report["kernel_hbm"][pname] = rec
+
+    # packed attention-KV tiles (DESIGN.md §11): the k + v payload and
+    # scale buffers one attention layer's flash sweep streams from HBM
+    # (and stores as the backward residuals) under each MX policy's
+    # ``mx_attn`` format — groups of 32 along the head dimension.
+    report["attn_kv"] = {}
+    bh, t, hd = (4, 32, 64) if quick else (8, 128, 64)
+    kv = jnp.asarray(rng.normal(0, 1, (bh, t, hd)), jnp.float32)
+    for pname in ("mxfp8", "mxfp6", "mxfp4"):
+        pol = get_policy(pname)
+        kp, ks8 = ops.mx_quantize_kv(kv, pol.mx_attn_name, impl="xla")
+        vp, vs8 = ops.mx_quantize_kv(kv, pol.mx_attn_name, impl="xla")
+        payload = int(np.prod(kp.shape)) + int(np.prod(vp.shape))
+        scales = int(np.prod(ks8.shape)) + int(np.prod(vs8.shape))
+        report["attn_kv"][pname] = {
+            "format": pol.mx_attn_name,
+            "elements": 2 * bh * t * hd,
+            "payload_bytes": payload,
+            "scale_bytes": scales,
+            "total_bytes": payload + scales,
+            "bytes_per_element": (payload + scales) / (2 * bh * t * hd),
+        }
     return report
 
 
@@ -187,6 +215,18 @@ def check(report, baseline_path, tol=1.10):
               f"{b['total_bytes']} ({ratio:.3f}x) {status}")
         if ratio > tol:
             failed.append(f"kernel_hbm:{pname}")
+    # packed attention-KV tiles (§11): the flash sweep's HBM operands —
+    # growth means the KV payloads stopped being packed
+    for pname, rec in report.get("attn_kv", {}).items():
+        b = base.get("attn_kv", {}).get(pname)
+        if b is None:
+            continue
+        ratio = rec["total_bytes"] / max(b["total_bytes"], 1.0)
+        status = "OK" if ratio <= tol else "REGRESSED"
+        print(f"attn-kv {pname}: {rec['total_bytes']} vs baseline "
+              f"{b['total_bytes']} ({ratio:.3f}x) {status}")
+        if ratio > tol:
+            failed.append(f"attn_kv:{pname}")
     return failed
 
 

@@ -54,6 +54,15 @@ class Policy:
     #: defaults to ``mx_fwd`` / ``mx_bwd`` (the mxfp8 behavior).
     mx_wgrad_act: str = ""
     mx_wgrad_grad: str = ""
+    #: MX format for the attention KV sweep (DESIGN.md §11): k/v stream
+    #: into the flash kernel as packed payloads with E8M0 group scales
+    #: over the head dimension, decoded in-register next to the f32
+    #: online-softmax accumulator.  Forward-path tensors tolerate the
+    #: narrow element formats (Noune et al. 2206.02915), so each MX
+    #: policy uses its *forward* element format here; empty defaults to
+    #: ``mx_fwd``.  q and the (m, l, acc) state stay in the carrier /
+    #: f32 — only the streamed KV operands narrow.
+    mx_attn: str = ""
     #: loss-scaling needed? (fp16/fp8-e5m2 gradients have narrow range)
     loss_scaling: bool = False
 
@@ -87,6 +96,10 @@ class Policy:
     def mx_wgrad_grad_name(self) -> str:
         return self.mx_wgrad_grad or self.mx_bwd_name
 
+    @property
+    def mx_attn_name(self) -> str:
+        return self.mx_attn or self.mx_fwd
+
 
 # The paper's training recipe: E4M3 forward (more precision), E5M2 backward
 # (more range — gradients are long-tailed), fp32 accumulate, bf16 carrier.
@@ -104,7 +117,8 @@ HFP8_BLOCK = Policy("hfp8_block", jnp.float8_e4m3, jnp.float8_e5m2,
 #: exponent — fwd/dgrad/wgrad all run ``ops.mx_gemm``.
 MXFP8 = Policy("mxfp8", jnp.float8_e4m3, jnp.float8_e5m2,
                jnp.bfloat16, jnp.float32,
-               mx_fwd="mxfp8e4m3", mx_bwd="mxfp8e5m2", loss_scaling=True)
+               mx_fwd="mxfp8e4m3", mx_bwd="mxfp8e5m2",
+               mx_attn="mxfp8e4m3", loss_scaling=True)
 #: Sub-byte MX training policies (DESIGN.md §10): payloads stay packed
 #: (0.75 / 0.5 B per element) from the quantize kernel through the GEMM
 #: and across the explicit TP wire.  mxfp6 pairs E2M3 forward (more
@@ -116,12 +130,12 @@ MXFP6 = Policy("mxfp6", jnp.float8_e4m3, jnp.float8_e5m2,
                jnp.bfloat16, jnp.float32,
                mx_fwd="mxfp6e2m3", mx_bwd="mxfp6e3m2",
                mx_wgrad_act="mxfp8e4m3", mx_wgrad_grad="mxfp8e5m2",
-               loss_scaling=True)
+               mx_attn="mxfp6e2m3", loss_scaling=True)
 MXFP4 = Policy("mxfp4", jnp.float8_e4m3, jnp.float8_e5m2,
                jnp.bfloat16, jnp.float32,
                mx_fwd="mxfp4e2m1", mx_bwd="mxfp8e5m2",
                mx_wgrad_act="mxfp8e4m3", mx_wgrad_grad="mxfp8e5m2",
-               loss_scaling=True)
+               mx_attn="mxfp4e2m1", loss_scaling=True)
 BF16 = Policy("bf16", None, None, jnp.bfloat16, jnp.float32)
 FP16 = Policy("fp16", None, None, jnp.float16, jnp.float32,
               loss_scaling=True)

@@ -36,6 +36,8 @@ __all__ = ["exsdotp_gemm", "blockscale_gemm", "blockscale_blocks",
            "mx_quantize", "mx_dequantize", "mx_dequantize_packed",
            "mx_gemm", "mx_blocks", "mx_packed_blocks",
            "mx_pack", "mx_unpack", "mx_gemm_packed",
+           "mx_quantize_kv", "mx_flash_attention",
+           "mx_flash_attention_packed", "attention_blocks",
            "resolve_impl"]
 
 
@@ -323,6 +325,96 @@ def mx_gemm_packed(ap: jax.Array, sa8: jax.Array, bp: jax.Array,
         interpret=(impl == "pallas_interpret"))
     return out[:ap.reshape(-1, ap.shape[-1]).shape[0], :n].reshape(
         *lead, m, n)
+
+
+# --------------------------------------------------- MX attention ----
+
+def attention_blocks(s: int, t: int) -> "tuple[int, int] | None":
+    """(block_q, block_k) for a flash-attention sweep over S × T, or
+    None when no legal tiling exists.
+
+    Picks the largest power-of-two tile ≤ 128 that divides each length
+    (floor 8 — the sublane unit; the kernels assert exact divisibility
+    rather than padding, because attention masks are positional and a
+    padded length would need an extra in-kernel mask).
+    """
+    def pick(n):
+        for b in (128, 64, 32, 16, 8):
+            if n % b == 0:
+                return b
+        return None
+
+    bq, bk = pick(s), pick(t)
+    return (bq, bk) if bq and bk else None
+
+
+def mx_quantize_kv(kv: jax.Array, mx, *, impl: str = "auto"):
+    """Attention-shaped packed MX quantize: ``kv[..., T, hd]`` with
+    E8M0 group scales over the *head* dimension (DESIGN.md §11).
+
+    Thin shape-checked wrapper over ``mx_quantize(packed=True)`` — hd
+    must be a whole number of groups (no ragged tail: the head axis is
+    the q·kᵀ contraction, and a padded head dim would change
+    ``scale = hd**-0.5``).  Returns ``(payload [..., T, hd·w/8] u8,
+    scales [..., T, hd/group] u8)``.
+    """
+    mx = get_mx_format(mx)
+    hd = kv.shape[-1]
+    assert hd % mx.group == 0, (hd, mx.group)
+    return mx_quantize(kv, mx, impl=impl, packed=True)
+
+
+def mx_flash_attention_packed(q: jax.Array, kp: jax.Array, ks8: jax.Array,
+                              vp: jax.Array, vs8: jax.Array, *, mx_k,
+                              mx_v=None, causal: bool = True,
+                              block_q=None, block_k=None,
+                              impl: str = "auto") -> jax.Array:
+    """Flash attention straight from packed MX KV storage (DESIGN.md
+    §11) — the attention analogue of ``mx_gemm_packed``.
+
+    ``q [BH, S, hd]`` carrier precision; ``(kp, ks8)`` / ``(vp, vs8)``
+    from ``mx_quantize_kv``.  On the Pallas impls the packed refs enter
+    the kernel as-is and decode in-register per KV tile
+    (``mx_flash_attention_pallas``); the xla branch dequantizes (exact
+    — pow2 scales) and runs the straight-softmax reference — identical
+    math up to f32 summation order and the online-softmax rescale,
+    which exact-arithmetic operands make bitwise equal.
+    """
+    from .flash_attention import mx_flash_attention_pallas
+    impl = resolve_impl(impl)
+    mx_k = get_mx_format(mx_k)
+    mx_v = mx_k if mx_v is None else get_mx_format(mx_v)
+    hd = q.shape[-1]
+    if impl == "xla":
+        kf = mx_dequantize_packed(kp, ks8, mx_k, k=hd).astype(jnp.float32)
+        vf = mx_dequantize_packed(vp, vs8, mx_v, k=hd).astype(jnp.float32)
+        return ref.flash_attention_ref(q, kf, vf, causal=causal)
+    blocks = attention_blocks(q.shape[1], kp.shape[1])
+    assert blocks is not None, (q.shape, kp.shape)
+    bq, bk = blocks
+    return mx_flash_attention_pallas(
+        q, kp, ks8, vp, vs8, mx_k=mx_k, mx_v=mx_v, causal=causal,
+        block_q=block_q or bq, block_k=block_k or bk,
+        interpret=(impl == "pallas_interpret"))
+
+
+def mx_flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *, mx_k,
+                       mx_v=None, causal: bool = True, block_q=None,
+                       block_k=None, impl: str = "auto") -> jax.Array:
+    """Quantized-KV flash attention from high-precision operands:
+    ``mx_quantize_kv`` both KV tensors (groups of 32 along hd, E8M0
+    scales, packed payloads), then ``mx_flash_attention_packed``.
+    q and the online-softmax state stay wide — only the streamed KV
+    operands narrow (the forward-path regime of Noune et al.
+    2206.02915).
+    """
+    mx_k = get_mx_format(mx_k)
+    mx_v = mx_k if mx_v is None else get_mx_format(mx_v)
+    kp, ks8 = mx_quantize_kv(k, mx_k, impl=impl)
+    vp, vs8 = mx_quantize_kv(v, mx_v, impl=impl)
+    return mx_flash_attention_packed(
+        q, kp, ks8, vp, vs8, mx_k=mx_k, mx_v=mx_v, causal=causal,
+        block_q=block_q, block_k=block_k, impl=impl)
 
 
 def mx_dequantize(q: jax.Array, s: jax.Array, mx) -> jax.Array:

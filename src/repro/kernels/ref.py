@@ -1,14 +1,22 @@
-"""Pure-jnp oracles for every Pallas kernel (bit-faithful semantics)."""
+"""Pure-jnp oracles for every Pallas kernel (bit-faithful semantics).
+
+``mx_flash_attention_ref`` is the one numpy-carried oracle: it leans on
+the numpy format mirrors (``mx_quantize_np``/``mx_dequantize_np``) so
+the attention test harness has a reference with no JAX ops at all.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from ..core import formats as F
 from ..core.formats import get_mx_format, quantize
 from ..core.scaling import expand_group_scales
 
 __all__ = ["exsdotp_gemm_ref", "quant_blockwise_ref", "blockscale_gemm_ref",
-           "mx_quant_ref", "mx_gemm_ref"]
+           "mx_quant_ref", "mx_gemm_ref", "flash_attention_ref",
+           "mx_flash_attention_ref"]
 
 
 def exsdotp_gemm_ref(a: jax.Array, b: jax.Array, scale=1.0,
@@ -124,3 +132,52 @@ def flash_attention_ref(q, k, v, *, causal=True):
     w = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bqk,bkd->bqd", w,
                       v.astype(jnp.float32)).astype(q.dtype)
+
+
+def mx_flash_attention_ref(q, k, v, *, mx_k, mx_v=None, causal=True):
+    """Numpy oracle for the MX-quantized KV flash attention kernel.
+
+    Quantizes k/v per (row × group-along-hd) with the numpy MX mirrors
+    (one E8M0 pow2 scale per 32 head-dim elements — lossless to undo),
+    then computes f32 softmax attention mirroring the kernel's
+    operation order: logits → row max → ``p = exp(s - m)`` →
+    ``acc = Σ p·v`` → one division by ``max(l, 1e-30)``.  Bit-identical
+    to ``mx_flash_attention_pallas`` whenever every f32 intermediate is
+    exact (``tests/fuzz.exact_attention_operands`` constructs such
+    operands: the per-block row max then equals the global max, so the
+    online rescale factors are exactly 0 or 1).
+
+    Masked (structurally-zero) keys are excluded from the weighted sum
+    entirely — the ``p·v`` products are zeroed by the mask, not merely
+    weighted by ``exp(-inf) = 0`` — matching the carry-skip kernel for
+    every tile beyond the causal diagonal.  Poison (NaN-scale) groups
+    in the *valid* region propagate identically in both; tests keep
+    poison out of the partially-masked diagonal band, where the kernel
+    necessarily still streams the masked columns of a live tile.
+
+    Returns ``out [BH, S, hd]`` as ``q.dtype``; pure numpy throughout.
+    """
+    mx_k = get_mx_format(mx_k)
+    mx_v = mx_k if mx_v is None else get_mx_format(mx_v)
+    qf = np.asarray(q, np.float32)
+    kq, ks = F.mx_quantize_np(np.asarray(k, np.float32), mx_k)
+    vq, vs = F.mx_quantize_np(np.asarray(v, np.float32), mx_v)
+    kf = F.mx_dequantize_np(kq, ks, mx_k).astype(np.float32)
+    vf = F.mx_dequantize_np(vq, vs, mx_v).astype(np.float32)
+    scale = np.float32(qf.shape[-1] ** -0.5)
+    with np.errstate(invalid="ignore", over="ignore"):
+        s = np.einsum("bqd,bkd->bqk", qf, kf).astype(np.float32) * scale
+        sq, t = s.shape[-2], s.shape[-1]
+        valid = None
+        if causal:
+            valid = np.arange(t)[None, :] <= np.arange(sq)[:, None]
+            s = np.where(valid[None], s, -np.inf)
+        m = s.max(axis=-1, keepdims=True)
+        p = np.exp(s - m)
+        l = p.sum(axis=-1, keepdims=True, dtype=np.float32)
+        pv = p[..., None] * vf[:, None, :, :]            # [BH, S, T, hd]
+        if valid is not None:
+            pv = np.where(valid[None, :, :, None], pv, np.float32(0))
+        acc = pv.sum(axis=-2, dtype=np.float32)
+        out = acc / np.maximum(l, np.float32(1e-30))
+    return out.astype(np.asarray(q).dtype)

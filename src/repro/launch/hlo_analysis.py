@@ -337,6 +337,9 @@ def policy_packed_footprint(policy) -> dict:
             "dgrad_grad": pol.mx_bwd_name, "dgrad_w": pol.mx_fwd,
             "wgrad_act": pol.mx_wgrad_act_name,
             "wgrad_grad": pol.mx_wgrad_grad_name,
+            # attention KV tiles stream packed through the flash sweep
+            # and double as the backward residuals (DESIGN.md §11)
+            "attn_kv": pol.mx_attn_name,
         }
         out["operands"] = {r: get_mx_format(n).packed_bytes_per_element
                            for r, n in roles.items()}
@@ -346,15 +349,19 @@ def policy_packed_footprint(policy) -> dict:
                       if pol.block_scale else 0.0)
         bpe_f = jnp.dtype(pol.fwd_dtype).itemsize + scale_over
         bpe_b = jnp.dtype(pol.bwd_dtype).itemsize + scale_over
+        # attention stays at carrier precision outside the MX policies:
+        # the per-tensor/block paths quantize GEMM operands only
+        bpe_c = float(jnp.dtype(pol.compute_dtype).itemsize)
         out["operands"] = {"fwd_act": bpe_f, "fwd_w": bpe_f,
                            "dgrad_grad": bpe_b, "dgrad_w": bpe_f,
-                           "wgrad_act": bpe_f, "wgrad_grad": bpe_b}
+                           "wgrad_act": bpe_f, "wgrad_grad": bpe_b,
+                           "attn_kv": bpe_c}
         out["residual_bpe"] = bpe_f
     else:
         bpe = float(jnp.dtype(pol.compute_dtype).itemsize)
         out["operands"] = {r: bpe for r in
                            ("fwd_act", "fwd_w", "dgrad_grad", "dgrad_w",
-                            "wgrad_act", "wgrad_grad")}
+                            "wgrad_act", "wgrad_grad", "attn_kv")}
         out["residual_bpe"] = bpe
     out["fwd_wire_fraction_vs_bf16"] = out["operands"]["fwd_act"] / 2.0
     return out
@@ -368,7 +375,7 @@ def format_packed_footprint(policy) -> str:
     lines = [f"[{fp['policy']}] packed operand footprint (bytes/element; "
              f"bf16 baseline = 2.0):"]
     for role in ("fwd_act", "fwd_w", "dgrad_grad", "dgrad_w",
-                 "wgrad_act", "wgrad_grad"):
+                 "wgrad_act", "wgrad_grad", "attn_kv"):
         lines.append(f"  {role:<11} {ops_[role]:.5f}")
     lines.append(f"  residual    {fp['residual_bpe']:.5f}  "
                  f"(activation payload saved for wgrad)")

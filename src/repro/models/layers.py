@@ -12,6 +12,7 @@ import jax.numpy as jnp
 
 from ..core.linear import linear
 from ..core.policy import get_policy
+from ..kernels import ops, ref
 from ..parallel.tp_gemm import (tp_applicable, tp_column_linear,
                                 tp_row_linear)
 
@@ -191,6 +192,64 @@ def _sdpa_chunked(q, k, v, *, causal, q_positions, kv_valid_len, chunk,
     return out.astype(q.dtype)
 
 
+# Quantized-KV attention under MX policies (DESIGN.md §11): forward
+# runs the packed flash pipeline — k/v quantize per (row × group-of-32
+# along hd) into packed payloads + E8M0 byte grids, the KV sweep
+# decodes them in-register next to the f32 online-softmax accumulator.
+# Backward recomputes exact-softmax attention on the *dequantized* KV
+# (the packed payloads are the residuals — the same one-fwd-rounding
+# memory story as qlinear's MX branch) and differentiates through it:
+# straight-through across the quantization, exactly like the GEMM path.
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _mx_sdpa(q, k, v, mx_name: str, causal: bool, impl: str):
+    """q/k/v [BH, S|T, hd] -> [BH, S, hd] with MX-quantized KV."""
+    out, _ = _mx_sdpa_fwd(q, k, v, mx_name, causal, impl)
+    return out
+
+
+def _mx_sdpa_fwd(q, k, v, mx_name, causal, impl):
+    kp, ks8 = ops.mx_quantize_kv(k, mx_name, impl=impl)
+    vp, vs8 = ops.mx_quantize_kv(v, mx_name, impl=impl)
+    out = ops.mx_flash_attention_packed(q, kp, ks8, vp, vs8, mx_k=mx_name,
+                                        causal=causal, impl=impl)
+    return out, (q, kp, ks8, vp, vs8)
+
+
+def _mx_sdpa_bwd(mx_name, causal, impl, res, g):
+    q, kp, ks8, vp, vs8 = res
+    hd = q.shape[-1]
+    kf = ops.mx_dequantize_packed(kp, ks8, mx_name, k=hd).astype(q.dtype)
+    vf = ops.mx_dequantize_packed(vp, vs8, mx_name, k=hd).astype(q.dtype)
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: ref.flash_attention_ref(q_, k_, v_,
+                                                   causal=causal),
+        q, kf, vf)
+    return vjp(g)
+
+
+_mx_sdpa.defvjp(_mx_sdpa_fwd, _mx_sdpa_bwd)
+
+
+def _mx_attention_applicable(policy, *, s, t, hd, kv_cache, cross_kv):
+    """Route train/prefill self-attention through the quantized kernel?
+
+    Requires an MX policy, no decode cache and no cross-KV (so q
+    positions are 0..S-1 and the kernel's raw-index causal mask is the
+    model's mask), hd a whole number of groups, and a legal S/T tiling.
+    Anything else falls back to ``_sdpa_chunked`` — numerically the
+    unquantized path, exactly as misaligned shapes fall off the TP wire.
+    """
+    if not getattr(policy, "mx", False) or not policy.mx_attn_name:
+        return False
+    if kv_cache is not None or cross_kv is not None:
+        return False
+    from ..core.formats import get_mx_format
+    if hd % get_mx_format(policy.mx_attn_name).group != 0:
+        return False
+    return ops.attention_blocks(s, t) is not None
+
+
 def attention(x, p, cfg, policy, *, positions, kv_cache=None, cross_kv=None,
               causal=None, rules=None, impl="auto"):
     """Returns (out [B,S,D], new_kv_cache).
@@ -237,9 +296,25 @@ def attention(x, p, cfg, policy, *, positions, kv_cache=None, cross_kv=None,
         k = rules.act(k, "batch", None, "kv_heads" if cfg.n_kv_heads > 1 else None, None)
         v = rules.act(v, "batch", None, "kv_heads" if cfg.n_kv_heads > 1 else None, None)
 
-    out = _sdpa_chunked(q, k, v, causal=causal, q_positions=positions,
-                        kv_valid_len=kv_valid_len, chunk=cfg.attn_q_chunk,
-                        rules=rules)
+    t = k.shape[1]
+    if _mx_attention_applicable(policy, s=s, t=t, hd=hd, kv_cache=kv_cache,
+                                cross_kv=cross_kv):
+        # GQA repeat stays OUTSIDE the custom_vjp: repeat's own autodiff
+        # sums dk/dv back over the head groups for free.
+        rep = cfg.n_heads // cfg.n_kv_heads
+        kr = jnp.repeat(k, rep, axis=2).transpose(0, 2, 1, 3)
+        vr = jnp.repeat(v, rep, axis=2).transpose(0, 2, 1, 3)
+        qh = q.transpose(0, 2, 1, 3)                     # [B,H,S,hd]
+        h = cfg.n_heads
+        out = _mx_sdpa(qh.reshape(b * h, s, hd),
+                       kr.reshape(b * h, t, hd),
+                       vr.reshape(b * h, t, hd),
+                       policy.mx_attn_name, causal, impl)
+        out = out.reshape(b, h, s, hd).transpose(0, 2, 1, 3)
+    else:
+        out = _sdpa_chunked(q, k, v, causal=causal, q_positions=positions,
+                            kv_valid_len=kv_valid_len, chunk=cfg.attn_q_chunk,
+                            rules=rules)
     out = out.reshape(b, s, cfg.n_heads * hd)
     out = proj(out, p["wo"], None, policy, rules, impl, kind="row")
     if rules is not None:

@@ -103,6 +103,66 @@ def fp6_lanes(rng, n: int = 4096) -> np.ndarray:
                     -1).astype(np.uint8)
 
 
+def attention_shapes():
+    """(bh, s, t, hd) sweep for the attention harness: ragged-ish S/T at
+    block multiples (the kernel asserts divisibility rather than
+    padding: 8-multiples pick up block 8, pow2 lengths the big tiles),
+    S = T and S != T, and both head dims the packed formats care about
+    (hd = 64 and 128 — whole groups of 32 either way)."""
+    return [
+        (2, 64, 64, 64),      # square, block 64
+        (1, 128, 128, 128),   # square, the full 128 tile
+        (2, 96, 96, 64),      # 96 = 3·32: falls to block 32
+        (1, 64, 128, 64),     # S < T (packed KV longer than q)
+        (1, 128, 64, 128),    # S > T
+        (3, 40, 40, 64),      # 40 = 5·8: sublane-floor block 8
+    ]
+
+
+def exact_attention_operands(rng, bh, s, t, hd, *, causal=True,
+                             specials=False):
+    """Attention operands on which the online softmax is *exact* — the
+    flash kernel is bitwise equal to a straight-softmax oracle in any
+    block order.  Returns ``(q, k, v)`` f32.
+
+    Construction: ``q[b, i]`` is one-hot at column ``i % hd`` with value
+    8, so the logit for key ``j`` is just ``8·k[j, i%hd]·hd**-0.5`` —
+    every k element is a logit carrier.  Carrier values are 0 (survivor)
+    or -256 (suppressed): suppressed logits sit ≥ 128 below the row max
+    of 0, so ``exp`` underflows to exactly 0.0 in f32 (cutoff ≈ -104)
+    and every online rescale factor is exactly 0 (pre-survivor garbage
+    is erased: 0·finite = 0) or exactly 1 (max unchanged).  Survivor
+    count per carrier column is a power of two (1/2/4) — ``l`` is a
+    pow2, so the final division is exact — and survivors for column
+    ``c`` sit at key indices ≤ c, inside every causal row that uses the
+    column.  v (and k: {0, -256}) draws from {0, ±64, ±128, ±256},
+    which quantize *losslessly* under every MX element format (pow2
+    group amax → exact E8M0 scale → pow2 quotients), and weighted sums
+    of ≤ 4 such values are exact f32 integers.
+
+    ``specials=True`` poisons one v group (NaN) on one key row: every
+    unmasked query row goes NaN in exactly that group's columns, both
+    in the kernel (payload·NaN-scale) and the oracle.  Use with
+    ``causal=False`` only — a *partially*-masked causal tile still
+    streams its masked columns, where kernel 0·NaN and the oracle's
+    structural exclusion of masked keys legitimately differ.
+    """
+    vals = np.asarray([0.0, 64.0, -64.0, 128.0, -128.0, 256.0, -256.0])
+    q = np.zeros((bh, s, hd), np.float32)
+    rows = np.arange(s)
+    q[:, rows, rows % hd] = 8.0
+    k = np.full((bh, t, hd), -256.0)
+    for b in range(bh):
+        for c in range(hd):
+            avail = (min(c, t - 1) if causal else t - 1) + 1
+            count = int(rng.choice([n for n in (1, 2, 4) if n <= avail]))
+            k[b, rng.choice(avail, size=count, replace=False), c] = 0.0
+    v = rng.choice(vals, size=(bh, t, hd))
+    if specials:
+        v[:, t // 2, :32] = np.nan
+    return (q, k.astype(np.float32), v.astype(np.float32))
+
+
 def exact_mx_operands(rng, m, k, n, mx, span=16, specials=True):
     """GEMM operands on which every fp32 intermediate is exact.
 

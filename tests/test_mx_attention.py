@@ -1,0 +1,377 @@
+"""MX-quantized flash attention (DESIGN.md §11): oracle-backed harness.
+
+Three layers, mirroring test_mx.py:
+
+1. the numpy oracle (``ref.mx_flash_attention_ref``) is pinned to the
+   unquantized reference on losslessly-quantizable operands;
+2. the packed Pallas kernel (interpret mode) and the xla ops branch must
+   match the oracle **bit for bit** on ``fuzz.exact_attention_operands``
+   — data constructed so every online-softmax rescale is exactly 0 or 1
+   and every f32 sum is exact — for every supported MX format, poison
+   (NaN-scale) groups included; arbitrary data is held to f32
+   summation-order tolerance.  The causal carry-skip is regression-
+   tested for bitwise neutrality and for actually skipping (the
+   ``debug_visited`` interpret-mode counter);
+3. model routing: ``attention()`` under the MX policies runs the packed
+   kernel (and only then), a real train step under ``mxfp8`` routes and
+   produces finite grads, and the packed-footprint accounting exposes
+   the KV bytes the pipeline saves.
+"""
+from unittest import mock
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import fuzz
+from repro.core import formats as F
+from repro.core.policy import get_policy
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import (flash_attention_pallas,
+                                           mx_flash_attention_pallas)
+
+#: one element format per training policy — the tier-1 sweep
+POLICY_FORMATS = ["mxfp8e4m3", "mxfp6e2m3", "mxfp4e2m1"]
+ALL_FORMATS = list(F.MX_FORMATS)
+
+TIER1_SHAPES = [(2, 64, 64, 64), (1, 64, 128, 64), (3, 40, 40, 64)]
+
+
+def _run_all_impls(q, k, v, name, causal):
+    """(oracle, interpret, xla) outputs for one format/mask config."""
+    want = ref.mx_flash_attention_ref(q, k, v, mx_k=name, causal=causal)
+    qj, kj, vj = jnp.asarray(q), jnp.asarray(k), jnp.asarray(v)
+    got_i = ops.mx_flash_attention(qj, kj, vj, mx_k=name, causal=causal,
+                                   impl="pallas_interpret")
+    got_x = ops.mx_flash_attention(qj, kj, vj, mx_k=name, causal=causal,
+                                   impl="xla")
+    return want, np.asarray(got_i), np.asarray(got_x)
+
+
+# ------------------------------------------------------------- oracle ----
+
+@pytest.mark.parametrize("causal", [True, False], ids=["causal", "full"])
+def test_oracle_is_plain_softmax_on_lossless_operands(causal):
+    """k/v from {0, ±64, ±128, ±256} survive every MX quantizer exactly,
+    so the quantized oracle must equal the unquantized reference."""
+    rng = np.random.default_rng(0)
+    q, k, v = fuzz.exact_attention_operands(rng, 2, 64, 64, 64,
+                                            causal=causal)
+    plain = np.asarray(ref.flash_attention_ref(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), causal=causal))
+    for name in ALL_FORMATS:
+        want = ref.mx_flash_attention_ref(q, k, v, mx_k=name, causal=causal)
+        np.testing.assert_array_equal(want, plain, err_msg=name)
+
+
+# ------------------------------------------------- kernel bit-exactness --
+
+@pytest.mark.parametrize("causal", [True, False], ids=["causal", "full"])
+@pytest.mark.parametrize("name", POLICY_FORMATS)
+def test_kernel_bit_exact_vs_oracle(name, causal):
+    for i, (bh, s, t, hd) in enumerate(TIER1_SHAPES):
+        rng = np.random.default_rng(100 + i)
+        q, k, v = fuzz.exact_attention_operands(rng, bh, s, t, hd,
+                                                causal=causal)
+        want, got_i, got_x = _run_all_impls(q, k, v, name, causal)
+        np.testing.assert_array_equal(got_i, want,
+                                      err_msg=f"interp {(bh, s, t, hd)}")
+        np.testing.assert_array_equal(got_x, want,
+                                      err_msg=f"xla {(bh, s, t, hd)}")
+
+
+@pytest.mark.exhaustive
+@pytest.mark.parametrize("causal", [True, False], ids=["causal", "full"])
+@pytest.mark.parametrize("name", ALL_FORMATS)
+def test_kernel_bit_exact_vs_oracle_all_formats(name, causal):
+    """Nightly: every format × every harness shape (incl. hd=128)."""
+    for i, (bh, s, t, hd) in enumerate(fuzz.attention_shapes()):
+        rng = np.random.default_rng(200 + i)
+        q, k, v = fuzz.exact_attention_operands(rng, bh, s, t, hd,
+                                                causal=causal)
+        want, got_i, got_x = _run_all_impls(q, k, v, name, causal)
+        np.testing.assert_array_equal(got_i, want,
+                                      err_msg=f"interp {(bh, s, t, hd)}")
+        np.testing.assert_array_equal(got_x, want,
+                                      err_msg=f"xla {(bh, s, t, hd)}")
+
+
+@pytest.mark.parametrize("name", POLICY_FORMATS)
+def test_kernel_poison_group_propagates(name):
+    """A NaN-scale v group poisons exactly its 32 output columns, for
+    every query row, identically in kernel and oracle.  causal=False:
+    a partially-masked causal tile still streams its masked columns,
+    where kernel 0·NaN and the oracle's structural exclusion of masked
+    keys legitimately differ (see the oracle docstring)."""
+    rng = np.random.default_rng(7)
+    q, k, v = fuzz.exact_attention_operands(rng, 2, 64, 64, 64,
+                                            causal=False, specials=True)
+    want, got_i, got_x = _run_all_impls(q, k, v, name, causal=False)
+    nan_w = np.isnan(want)
+    # poisoned group 0 of hd -> columns [0, 32) NaN on every row, only
+    assert nan_w[:, :, :32].all() and not nan_w[:, :, 32:].any()
+    for got, tag in ((got_i, "interp"), (got_x, "xla")):
+        np.testing.assert_array_equal(np.isnan(got), nan_w, err_msg=tag)
+        np.testing.assert_array_equal(got[~nan_w], want[~nan_w],
+                                      err_msg=tag)
+
+
+@pytest.mark.parametrize("name", POLICY_FORMATS)
+def test_kernel_tolerance_on_arbitrary_data(name):
+    """Random data: quantization is identical across impls (same oracle
+    math), so the only drift is f32 summation order in the sweep."""
+    rng = np.random.default_rng(11)
+    for bh, s, t, hd in TIER1_SHAPES:
+        q = rng.normal(0, 1, (bh, s, hd)).astype(np.float32)
+        k = rng.normal(0, 1, (bh, t, hd)).astype(np.float32)
+        v = rng.normal(0, 1, (bh, t, hd)).astype(np.float32)
+        want, got_i, got_x = _run_all_impls(q, k, v, name, causal=True)
+        np.testing.assert_allclose(got_i, want, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(got_x, want, rtol=1e-4, atol=1e-4)
+
+
+# ----------------------------------------------------------- carry-skip --
+
+@pytest.mark.parametrize("shape,blocks", [
+    ((2, 64, 64, 32), (32, 32)),    # S = T, square tiles
+    ((2, 64, 64, 32), (16, 32)),    # bq < bk: skip boundary mid-row-tile
+    ((2, 64, 64, 32), (32, 16)),    # bq > bk: several skipped col tiles
+    ((1, 128, 64, 32), (32, 32)),   # S > T
+    ((1, 64, 128, 32), (32, 32)),   # S < T: whole right half skippable
+], ids=str)
+def test_carry_skip_is_bitwise_neutral(shape, blocks):
+    """Causal output is identical with the skip on or off — a fully
+    masked tile's update is a structural no-op — on arbitrary finite
+    data (no exactness construction needed)."""
+    bh, s, t, hd = shape
+    bq, bk = blocks
+    rng = np.random.default_rng(13)
+    q = jnp.asarray(rng.normal(0, 1, (bh, s, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (bh, t, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (bh, t, hd)), jnp.float32)
+    on = flash_attention_pallas(q, k, v, causal=True, block_q=bq,
+                                block_k=bk, skip_masked=True,
+                                interpret=True)
+    off = flash_attention_pallas(q, k, v, causal=True, block_q=bq,
+                                 block_k=bk, skip_masked=False,
+                                 interpret=True)
+    np.testing.assert_array_equal(np.asarray(on), np.asarray(off))
+
+
+def test_carry_skip_visits_only_live_tiles():
+    """The interpret-mode tile counter: a causal (iq, kk) tile executes
+    the sweep body iff its first column can reach its last row
+    (kk·bk < (iq+1)·bq); non-causal and skip-off sweeps visit all."""
+    rng = np.random.default_rng(17)
+    bh, s, t, hd, bq, bk = 2, 64, 64, 32, 16, 32
+    q = jnp.asarray(rng.normal(0, 1, (bh, s, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (bh, t, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (bh, t, hd)), jnp.float32)
+    iq = np.arange(s // bq)[:, None]
+    kk = np.arange(t // bk)[None, :]
+    live = (kk * bk < (iq + 1) * bq).astype(np.int32)
+    assert 0 < live.sum() < live.size  # the case actually exercises both
+
+    _, vis = flash_attention_pallas(q, k, v, causal=True, block_q=bq,
+                                    block_k=bk, debug_visited=True,
+                                    interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(vis), np.broadcast_to(live, (bh, *live.shape)))
+    for kwargs in ({"causal": False}, {"causal": True,
+                                       "skip_masked": False}):
+        _, vis = flash_attention_pallas(q, k, v, block_q=bq, block_k=bk,
+                                        debug_visited=True, interpret=True,
+                                        **kwargs)
+        assert np.asarray(vis).all(), kwargs
+
+
+def test_carry_skip_in_packed_kernel():
+    """The MX kernel shares the shell: same visit pattern, and skip
+    on/off stays bitwise equal through the packed decode path."""
+    rng = np.random.default_rng(19)
+    q, k, v = fuzz.exact_attention_operands(rng, 1, 64, 64, 64)
+    kp, ks8 = ops.mx_quantize_kv(jnp.asarray(k), "mxfp8e4m3", impl="xla")
+    vp, vs8 = ops.mx_quantize_kv(jnp.asarray(v), "mxfp8e4m3", impl="xla")
+    args = (jnp.asarray(q), kp, ks8, vp, vs8)
+    on, vis = mx_flash_attention_pallas(*args, mx_k="mxfp8e4m3",
+                                        block_q=16, block_k=32,
+                                        debug_visited=True, interpret=True)
+    off = mx_flash_attention_pallas(*args, mx_k="mxfp8e4m3", block_q=16,
+                                    block_k=32, skip_masked=False,
+                                    interpret=True)
+    np.testing.assert_array_equal(np.asarray(on), np.asarray(off))
+    iq, kk = np.arange(4)[:, None], np.arange(2)[None, :]
+    np.testing.assert_array_equal(
+        np.asarray(vis)[0], (kk * 32 < (iq + 1) * 16).astype(np.int32))
+
+
+# ------------------------------------------------------- ops-layer API ---
+
+def test_attention_blocks_tiling():
+    assert ops.attention_blocks(64, 64) == (64, 64)
+    assert ops.attention_blocks(256, 128) == (128, 128)
+    assert ops.attention_blocks(96, 40) == (32, 8)
+    assert ops.attention_blocks(33, 64) is None   # S not an 8-multiple
+    assert ops.attention_blocks(64, 12) is None   # T not an 8-multiple
+
+
+def test_mx_quantize_kv_requires_whole_groups():
+    with pytest.raises(AssertionError):
+        ops.mx_quantize_kv(jnp.zeros((1, 8, 48)), "mxfp8e4m3", impl="xla")
+
+
+def test_packed_kernel_checks_payload_shapes():
+    q = jnp.zeros((1, 32, 64), jnp.float32)
+    kp, ks8 = ops.mx_quantize_kv(jnp.zeros((1, 32, 64)), "mxfp6e2m3",
+                                 impl="xla")
+    with pytest.raises(AssertionError):  # payload packed for another width
+        mx_flash_attention_pallas(q, kp, ks8, kp, ks8, mx_k="mxfp8e4m3",
+                                  block_q=32, block_k=32, interpret=True)
+
+
+def test_packed_kv_is_the_honest_footprint():
+    """The payload the sweep streams is width/8 bytes per element plus
+    one scale byte per group — the bytes the wire benchmark gates."""
+    kv = jnp.asarray(np.random.default_rng(3).normal(0, 1, (2, 64, 64)),
+                     jnp.float32)
+    for name in POLICY_FORMATS:
+        mx = F.get_mx_format(name)
+        p, s8 = ops.mx_quantize_kv(kv, name, impl="xla")
+        assert p.dtype == jnp.uint8 and s8.dtype == jnp.uint8
+        assert p.shape == (2, 64, 64 * mx.elem.width // 8)
+        assert s8.shape == (2, 64, 64 // 32)
+        total = p.size + s8.size
+        assert total == int(2 * 64 * 64 * mx.packed_bytes_per_element)
+
+
+# ---------------------------------------------------------- model layer --
+
+def _tiny_attn_setup(dtype=jnp.float32):
+    from repro.models import layers
+
+    class Cfg:
+        d_model = 64
+        n_heads = 2
+        n_kv_heads = 1
+        head_dim_eff = 32
+        qkv_bias = False
+        causal = True
+        pos_embed = "rope"
+        rope_theta = 10000.0
+        attn_q_chunk = 32
+        norm = "rmsnorm"
+        norm_eps = 1e-5
+
+    cfg = Cfg()
+    p = layers.init_attention(jax.random.key(0), cfg, dtype)
+    x = jax.random.normal(jax.random.key(1), (2, 64, 64), dtype)
+    return layers, cfg, p, x
+
+
+@pytest.mark.parametrize("policy", ["mxfp8", "mxfp6", "mxfp4"])
+def test_attention_routes_mx_policies_through_packed_kernel(policy):
+    layers, cfg, p, x = _tiny_attn_setup()
+    pol = get_policy(policy)
+    calls = []
+    orig = ops.mx_flash_attention_packed
+
+    def spy(*a, **kw):
+        calls.append(F.get_mx_format(kw["mx_k"]).name)
+        return orig(*a, **kw)
+
+    with mock.patch.object(ops, "mx_flash_attention_packed",
+                           side_effect=spy):
+        def loss(p):
+            out, _ = layers.attention(x, p, cfg, pol,
+                                      positions=jnp.arange(64), impl="xla")
+            return jnp.sum(out.astype(jnp.float32) ** 2)
+
+        l, g = jax.value_and_grad(loss)(p)
+    assert calls == [pol.mx_attn_name], calls  # fwd routes; bwd recomputes
+    assert np.isfinite(float(l))
+    for leaf in jax.tree_util.tree_leaves(g):
+        assert np.isfinite(np.asarray(leaf, np.float32)).all()
+
+
+def test_attention_does_not_route_non_mx_or_decode():
+    layers, cfg, p, x = _tiny_attn_setup()
+    with mock.patch.object(ops, "mx_flash_attention_packed") as spy:
+        for pol in ("bf16", "hfp8", "hfp8_block", "fp32"):
+            layers.attention(x, p, cfg, get_policy(pol),
+                             positions=jnp.arange(64), impl="xla")
+        # decode: cache present -> positional masking the kernel lacks
+        cache = layers.init_kv_cache(cfg, 2, 128, jnp.float32)
+        layers.attention(x[:, :1], p, cfg, get_policy("mxfp8"),
+                         positions=jnp.arange(1), kv_cache=cache,
+                         impl="xla")
+        # misaligned sequence (not an 8-multiple)
+        layers.attention(x[:, :33], p, cfg, get_policy("mxfp8"),
+                         positions=jnp.arange(33), impl="xla")
+    assert not spy.called
+
+
+def test_attention_mx_output_tracks_unquantized():
+    """Routed output stays close to the exact-softmax path on the same
+    projections — the quantization is the only difference."""
+    layers, cfg, p, x = _tiny_attn_setup()
+    out_mx, _ = layers.attention(x, p, cfg, get_policy("mxfp8"),
+                                 positions=jnp.arange(64), impl="xla")
+    with mock.patch.object(layers, "_mx_attention_applicable",
+                           return_value=False):
+        out_ref, _ = layers.attention(x, p, cfg, get_policy("mxfp8"),
+                                      positions=jnp.arange(64), impl="xla")
+    err = np.abs(np.asarray(out_mx - out_ref, np.float32))
+    scale = np.abs(np.asarray(out_ref, np.float32)).max()
+    assert err.max() <= 0.1 * scale, (err.max(), scale)
+
+
+def test_train_step_routes_attention_under_mxfp8():
+    """A real train step (the train_lm tiny path, scaled down): the
+    packed attention kernel runs inside the jitted step and the loss/
+    grads stay finite."""
+    from repro.configs.base import ModelConfig
+    from repro.models import build_model
+    from repro.optim.adamw import AdamWConfig
+    from repro.train.train_step import make_train_state, make_train_step
+
+    cfg = ModelConfig(name="lm-attn-test", family="dense", n_layers=1,
+                      d_model=64, n_heads=2, n_kv_heads=1, d_ff=128,
+                      vocab_size=128, head_dim=32, policy_name="mxfp8",
+                      attn_q_chunk=64)
+    model = build_model(cfg)
+    opt = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=4)
+    state = make_train_state(model, jax.random.key(0), opt)
+    step = make_train_step(model, opt, impl="xla")
+    tokens = jnp.asarray(
+        np.random.default_rng(0).integers(0, 128, (2, 64)))
+
+    calls = []
+    orig = ops.mx_flash_attention_packed
+
+    def spy(*a, **kw):
+        calls.append(F.get_mx_format(kw["mx_k"]).name)
+        return orig(*a, **kw)
+
+    with mock.patch.object(ops, "mx_flash_attention_packed",
+                           side_effect=spy):
+        state, metrics = step(state, tokens)
+    # tracing may visit attention more than once (e.g. vjp re-trace);
+    # what matters is that every visit routed the packed kernel
+    assert calls and set(calls) == {"mxfp8e4m3"}, calls
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+
+
+def test_packed_footprint_reports_attn_kv():
+    from repro.launch.hlo_analysis import (format_packed_footprint,
+                                           policy_packed_footprint)
+    for policy in ("mxfp8", "mxfp6", "mxfp4"):
+        pol = get_policy(policy)
+        fp = policy_packed_footprint(policy)
+        want = F.get_mx_format(pol.mx_attn_name).packed_bytes_per_element
+        assert fp["operands"]["attn_kv"] == want, policy
+        assert "attn_kv" in format_packed_footprint(policy)
+    # non-MX: attention runs at carrier precision
+    assert policy_packed_footprint("hfp8")["operands"]["attn_kv"] == 2.0
+    assert policy_packed_footprint("fp32")["operands"]["attn_kv"] == 4.0
