@@ -100,6 +100,11 @@ def main() -> None:
     from benchmarks import mx_packed_sweep
     mx_packed_sweep.main(quick)
     print("=" * 72)
+    print("## Serving: paged-cache bytes/seq + decode tok/s per policy (§12)")
+    import json as _json
+    from benchmarks import serve_sweep
+    print(_json.dumps(serve_sweep.measure(quick), indent=2, sort_keys=True))
+    print("=" * 72)
     print("## Wire bytes per policy across the explicit TP wire (§9)")
     import jax
     if len(jax.devices()) >= 8:

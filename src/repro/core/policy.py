@@ -63,6 +63,15 @@ class Policy:
     #: ``mx_fwd``.  q and the (m, l, acc) state stay in the carrier /
     #: f32 — only the streamed KV operands narrow.
     mx_attn: str = ""
+    #: MX element format for the *serving* KV cache (DESIGN.md §12):
+    #: decode caches store packed codec payloads + E8M0 scale codes in
+    #: fixed-size page slots instead of carrier-precision tensors, and
+    #: the decode attention kernel dequantizes groups in-register.
+    #: Serving is pure-forward — the best case for the narrow formats —
+    #: so each MX policy uses its forward element format here.  Empty
+    #: keeps the bf16 carrier cache (also the fallback for head dims
+    #: that are not a whole number of groups).
+    mx_kv_cache: str = ""
     #: loss-scaling needed? (fp16/fp8-e5m2 gradients have narrow range)
     loss_scaling: bool = False
 
@@ -100,6 +109,10 @@ class Policy:
     def mx_attn_name(self) -> str:
         return self.mx_attn or self.mx_fwd
 
+    @property
+    def mx_kv_cache_name(self) -> str:
+        return self.mx_kv_cache or self.mx_attn_name
+
 
 # The paper's training recipe: E4M3 forward (more precision), E5M2 backward
 # (more range — gradients are long-tailed), fp32 accumulate, bf16 carrier.
@@ -118,7 +131,8 @@ HFP8_BLOCK = Policy("hfp8_block", jnp.float8_e4m3, jnp.float8_e5m2,
 MXFP8 = Policy("mxfp8", jnp.float8_e4m3, jnp.float8_e5m2,
                jnp.bfloat16, jnp.float32,
                mx_fwd="mxfp8e4m3", mx_bwd="mxfp8e5m2",
-               mx_attn="mxfp8e4m3", loss_scaling=True)
+               mx_attn="mxfp8e4m3", mx_kv_cache="mxfp8e4m3",
+               loss_scaling=True)
 #: Sub-byte MX training policies (DESIGN.md §10): payloads stay packed
 #: (0.75 / 0.5 B per element) from the quantize kernel through the GEMM
 #: and across the explicit TP wire.  mxfp6 pairs E2M3 forward (more
@@ -130,12 +144,14 @@ MXFP6 = Policy("mxfp6", jnp.float8_e4m3, jnp.float8_e5m2,
                jnp.bfloat16, jnp.float32,
                mx_fwd="mxfp6e2m3", mx_bwd="mxfp6e3m2",
                mx_wgrad_act="mxfp8e4m3", mx_wgrad_grad="mxfp8e5m2",
-               mx_attn="mxfp6e2m3", loss_scaling=True)
+               mx_attn="mxfp6e2m3", mx_kv_cache="mxfp6e2m3",
+               loss_scaling=True)
 MXFP4 = Policy("mxfp4", jnp.float8_e4m3, jnp.float8_e5m2,
                jnp.bfloat16, jnp.float32,
                mx_fwd="mxfp4e2m1", mx_bwd="mxfp8e5m2",
                mx_wgrad_act="mxfp8e4m3", mx_wgrad_grad="mxfp8e5m2",
-               mx_attn="mxfp4e2m1", loss_scaling=True)
+               mx_attn="mxfp4e2m1", mx_kv_cache="mxfp4e2m1",
+               loss_scaling=True)
 BF16 = Policy("bf16", None, None, jnp.bfloat16, jnp.float32)
 FP16 = Policy("fp16", None, None, jnp.float16, jnp.float32,
               loss_scaling=True)

@@ -1,0 +1,178 @@
+"""Decode attention over the serving KV cache — Pallas TPU kernels
+(DESIGN.md §12).
+
+Serving attends S new query rows (S=1 steady-state decode, S=prompt
+for batched prefill) against a cache of T slots of which only a
+per-sequence prefix ``lens + S`` is live: slots ``0..lens-1`` hold the
+history, ``lens..lens+S-1`` the rows being computed, and everything
+beyond is garbage (unwritten, or stale payloads from a freed page).
+Both kernels reuse the flash-attention shell (``_kernel``/``_call``)
+with two decode-specific twists threaded through the shared
+online-softmax core:
+
+* **base offset** — the per-sequence length enters as a scalar operand
+  (``[BH, 1]`` int32, one per batch·head row); q row ``i`` sits at
+  absolute cache slot ``base + i``, so the causal mask is
+  ``col <= base + row`` and the carry-skip condition gains ``+ base``
+  — with a dynamic base the skip doubles as a *page-skip*: KV tiles
+  past a short sequence's live prefix never execute.
+* **garbage masking** — the loader zeroes key slots at index
+  ``>= base + S`` *structurally* (before any dot), so non-finite trash
+  in dead cache slots — e.g. NaN-scale poison left by a retired
+  sequence whose pages were re-used — cannot leak into live rows via
+  ``0 · NaN``.  Poison *inside* the live prefix still propagates
+  (0xFF scale codes decode NaN), exactly like the train-path kernels.
+
+``mx_decode_attention_pallas`` streams the cache as *packed* codec
+payloads + E8M0 scale codes and decodes groups in-register beside the
+f32 (m, l, acc) accumulators — the same ``codec.decode_lanes`` fold
+point as ``mx_flash_attention_pallas``.  ``decode_attention_pallas``
+is the carrier-precision variant (the bf16 page-pool fallback).
+
+Compiled-TPU lane legality follows the §11 convention: packed payload
+rows must be 128-byte multiples and S=1 gives a sublane-short q tile —
+interp/CPU CI masks violations; real-TPU serving pads the head axis at
+the layer above.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..core.formats import e8m0_decode, get_mx_format
+from .codec import get_codec
+from .flash_attention import _call, _kernel
+
+__all__ = ["decode_attention_pallas", "mx_decode_attention_pallas"]
+
+
+def _lens2d(lens, bh):
+    lens = jnp.asarray(lens, jnp.int32)
+    assert lens.shape == (bh,), (lens.shape, bh)
+    return lens.reshape(bh, 1)
+
+
+def _mask_garbage(k, v, kk, limit, block_k):
+    """Zero key/value slots at cache index >= limit (structural
+    exclusion of dead slots — not via softmax weights, which would turn
+    stale NaN into NaN·0)."""
+    idx = kk * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (k.shape[0], 1), 0)
+    good = idx < limit
+    return jnp.where(good, k, 0.0), jnp.where(good, v, 0.0)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_q", "block_k", "skip_masked", "debug_visited",
+                     "interpret"))
+def decode_attention_pallas(q, k, v, lens, *, block_q: int = 8,
+                            block_k: int = 128, skip_masked: bool = True,
+                            debug_visited: bool = False,
+                            interpret: bool = False):
+    """q [BH, S, hd], k/v [BH, T, hd], lens [BH] -> [BH, S, hd].
+
+    q row ``i`` of sequence-head ``b`` attends cache slots
+    ``0..lens[b]+i``; slots beyond ``lens[b]+S`` are treated as garbage
+    and excluded structurally.  ``debug_visited=True`` additionally
+    returns the int32 [BH, S/bq, T/bk] visit grid (page-skip tests).
+    """
+    bh, s, hd = q.shape
+    t = k.shape[1]
+    assert s % block_q == 0 and t % block_k == 0, ((s, t),
+                                                   (block_q, block_k))
+
+    def load_kv(refs):
+        lens_ref, k_ref, v_ref = refs[0], refs[1], refs[2]
+        base = lens_ref[0, 0]
+
+        def loader(kk, limit):
+            return _mask_garbage(k_ref[0].astype(jnp.float32),
+                                 v_ref[0].astype(jnp.float32),
+                                 kk, limit, block_k)
+
+        return loader, base, refs[3:]
+
+    kern = functools.partial(
+        _kernel, load_kv=load_kv, causal=True, scale=hd ** -0.5,
+        block_q=block_q, block_k=block_k, skip_masked=skip_masked,
+        debug_visited=debug_visited)
+    specs = [pl.BlockSpec((1, 1), lambda b, i, kk: (b, 0)),
+             pl.BlockSpec((1, block_k, hd), lambda b, i, kk: (b, kk, 0)),
+             pl.BlockSpec((1, block_k, hd), lambda b, i, kk: (b, kk, 0))]
+    return _call(kern, q, (_lens2d(lens, bh), k, v), specs,
+                 block_q=block_q, block_k=block_k, t=t,
+                 debug_visited=debug_visited, interpret=interpret)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mx_k", "mx_v", "block_q", "block_k", "skip_masked",
+                     "debug_visited", "interpret"))
+def mx_decode_attention_pallas(q, kp, ks8, vp, vs8, lens, *, mx_k,
+                               mx_v=None, block_q: int = 8,
+                               block_k: int = 128,
+                               skip_masked: bool = True,
+                               debug_visited: bool = False,
+                               interpret: bool = False):
+    """Decode attention straight from the packed paged KV cache.
+
+    ``q [BH, S, hd]`` carrier precision; ``(kp, ks8)`` / ``(vp, vs8)``
+    are the gathered page slots in ``ops.mx_quantize_kv`` layout:
+    payload ``[BH, T, hd·w/8]`` uint8 + E8M0 codes ``[BH, T, hd/group]``
+    (group scales along the head dimension); ``lens [BH]`` int32 live
+    lengths.  Tiles stream packed from HBM and decode in-register; a
+    0xFF scale code inside the live prefix decodes NaN and poisons
+    exactly the rows that attend to it, while garbage slots beyond
+    ``lens + S`` are structurally zeroed before the dots.
+
+    Bit-exact vs ``ref.mx_decode_attention_ref`` on exact-arithmetic
+    operands (``tests/fuzz.exact_decode_operands``) — the same bar as
+    every codec kernel.
+    """
+    mx_k = get_mx_format(mx_k)
+    mx_v = mx_k if mx_v is None else get_mx_format(mx_v)
+    ck, cv = get_codec(mx_k), get_codec(mx_v)
+    g = mx_k.group
+    assert mx_v.group == g, (mx_k.name, mx_v.name)
+    bh, s, hd = q.shape
+    t = kp.shape[1]
+    assert s % block_q == 0 and t % block_k == 0, ((s, t),
+                                                   (block_q, block_k))
+    assert hd % g == 0, (hd, g)
+    assert kp.shape == (bh, t, ck.packed_cols(hd)), (kp.shape, (bh, t, hd))
+    assert vp.shape == (bh, t, cv.packed_cols(hd)), (vp.shape, (bh, t, hd))
+    assert ks8.shape == vs8.shape == (bh, t, hd // g), (ks8.shape, vs8.shape)
+    # scale codes at element resolution (compact grids are lane-illegal
+    # on compiled TPU — the §8 rule)
+    ks8e = jnp.repeat(ks8, g, axis=-1)
+    vs8e = jnp.repeat(vs8, g, axis=-1)
+
+    def load_kv(refs):
+        lens_ref = refs[0]
+        kp_ref, ks_ref, vp_ref, vs_ref = refs[1:5]
+        base = lens_ref[0, 0]
+
+        def loader(kk, limit):
+            k = ck.decode_lanes(kp_ref[0]) * e8m0_decode(ks_ref[0])
+            v = cv.decode_lanes(vp_ref[0]) * e8m0_decode(vs_ref[0])
+            return _mask_garbage(k, v, kk, limit, block_k)
+
+        return loader, base, refs[5:]
+
+    kern = functools.partial(
+        _kernel, load_kv=load_kv, causal=True, scale=hd ** -0.5,
+        block_q=block_q, block_k=block_k, skip_masked=skip_masked,
+        debug_visited=debug_visited)
+    pk, pv = ck.packed_cols(hd), cv.packed_cols(hd)
+    specs = [pl.BlockSpec((1, 1), lambda b, i, kk: (b, 0)),
+             pl.BlockSpec((1, block_k, pk), lambda b, i, kk: (b, kk, 0)),
+             pl.BlockSpec((1, block_k, hd), lambda b, i, kk: (b, kk, 0)),
+             pl.BlockSpec((1, block_k, pv), lambda b, i, kk: (b, kk, 0)),
+             pl.BlockSpec((1, block_k, hd), lambda b, i, kk: (b, kk, 0))]
+    return _call(kern, q, (_lens2d(lens, bh), kp, ks8e, vp, vs8e), specs,
+                 block_q=block_q, block_k=block_k, t=t,
+                 debug_visited=debug_visited, interpret=interpret)

@@ -58,20 +58,27 @@ NEG_INF = -1e30
 
 
 def _sweep_body(q, k, v, m_ref, l_ref, acc_ref, *, iq, kk, causal, scale,
-                block_q, block_k):
+                block_q, block_k, base=None):
     """One KV tile of the online-softmax recurrence (f32 throughout).
 
     ``q [bq, hd]``, ``k/v [bk, hd]`` are already-decoded f32 operands —
-    both kernels funnel through here, so the carry-skip and the MX
+    all kernels funnel through here, so the carry-skip and the MX
     variant cannot drift from the carrier-precision kernel's math.
     ``iq``/``kk`` are the grid coordinates, read once at the kernel's
     top level (``pl.program_id`` must not be bound inside a ``pl.when``
     body — the carry-skip wraps this whole function in one).
+
+    ``base`` (decode kernels — DESIGN.md §12) is a per-sequence scalar
+    offsetting q's absolute positions: q row ``i`` sits at cache slot
+    ``base + i``, so the causal mask becomes ``col <= base + row``.
+    ``base=None`` is the train/prefill case (identical to ``base=0``).
     """
     s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
     if causal:
         rows = iq * block_q + jax.lax.broadcasted_iota(
             jnp.int32, s.shape, 0)
+        if base is not None:
+            rows = rows + base
         cols = kk * block_k + jax.lax.broadcasted_iota(
             jnp.int32, s.shape, 1)
         s = jnp.where(cols <= rows, s, NEG_INF)
@@ -89,11 +96,17 @@ def _kernel(q_ref, *refs, load_kv, causal, scale, block_q, block_k,
             skip_masked, debug_visited):
     """Shared kernel shell: init / carry-skip / sweep / retire.
 
-    ``load_kv(refs)`` returns the decoded f32 (k, v) tiles plus the
-    remaining refs — the only point the carrier and packed variants
-    differ.
+    ``load_kv(refs)`` returns ``(loader, base, rest)`` — the only point
+    the carrier, packed, and decode variants differ.  ``loader(kk,
+    limit)`` yields the decoded f32 (k, v) tiles for KV-tile ``kk``
+    (zeroing key slots at index >= ``limit`` when one is given — the
+    decode kernels' structural exclusion of garbage cache slots beyond
+    the live length, so stale poison in freed pages can't leak through
+    ``0·NaN``).  ``base`` (None for train/prefill) is the per-sequence
+    absolute-position offset; with it, q's S rows cover cache slots
+    ``base..base+S-1`` and the live KV prefix is ``limit = base + S``.
     """
-    (k_fn, v_fn), refs = load_kv(refs)
+    loader, base, refs = load_kv(refs)
     if debug_visited:
         o_ref, vis_ref = refs[0], refs[1]
         m_ref, l_ref, acc_ref = refs[2:]
@@ -101,6 +114,7 @@ def _kernel(q_ref, *refs, load_kv, causal, scale, block_q, block_k,
         o_ref, vis_ref = refs[0], None
         m_ref, l_ref, acc_ref = refs[1:]
     iq, kk = pl.program_id(1), pl.program_id(2)
+    limit = None if base is None else base + pl.num_programs(1) * block_q
 
     @pl.when(kk == 0)
     def _init():
@@ -113,18 +127,25 @@ def _kernel(q_ref, *refs, load_kv, causal, scale, block_q, block_k,
 
     def _update():
         q = q_ref[0].astype(jnp.float32)                # [bq, hd]
-        _sweep_body(q, k_fn(), v_fn(), m_ref, l_ref, acc_ref,
+        k, v = loader(kk, limit)
+        _sweep_body(q, k, v, m_ref, l_ref, acc_ref,
                     iq=iq, kk=kk, causal=causal, scale=scale,
-                    block_q=block_q, block_k=block_k)
+                    block_q=block_q, block_k=block_k, base=base)
         if vis_ref is not None:
             vis_ref[0, 0, 0] = jnp.int32(1)
 
     if causal and skip_masked:
         # carry-skip: the tile is live iff its smallest column index can
-        # reach its largest row index (kk·bk <= iq·bq + bq - 1);
+        # reach its largest row index (kk·bk <= base + iq·bq + bq - 1);
         # otherwise every logit is the structural-zero NEG_INF and the
         # update is exactly a no-op — skip the exp/dot work entirely.
-        @pl.when(kk * block_k < (iq + 1) * block_q)
+        # With a dynamic ``base`` this doubles as the page-skip: tiles
+        # beyond a sequence's live length never execute.  Tile kk=0 is
+        # always live (base >= 0), so (m, l) never retire all-masked.
+        live = kk * block_k < (iq + 1) * block_q + (
+            0 if base is None else base)
+
+        @pl.when(live)
         def _live():
             _update()
     else:
@@ -189,8 +210,12 @@ def flash_attention_pallas(q, k, v, *, causal: bool = True,
 
     def load_kv(refs):
         k_ref, v_ref = refs[0], refs[1]
-        return ((lambda: k_ref[0].astype(jnp.float32),
-                 lambda: v_ref[0].astype(jnp.float32)), refs[2:])
+
+        def loader(kk, limit):
+            return (k_ref[0].astype(jnp.float32),
+                    v_ref[0].astype(jnp.float32))
+
+        return loader, None, refs[2:]
 
     kern = functools.partial(
         _kernel, load_kv=load_kv, causal=causal, scale=hd ** -0.5,
@@ -249,10 +274,12 @@ def mx_flash_attention_pallas(q, kp, ks8, vp, vs8, *, mx_k, mx_v=None,
 
     def load_kv(refs):
         kp_ref, ks_ref, vp_ref, vs_ref = refs[:4]
-        return ((lambda: ck.decode_lanes(kp_ref[0])
-                 * e8m0_decode(ks_ref[0]),
-                 lambda: cv.decode_lanes(vp_ref[0])
-                 * e8m0_decode(vs_ref[0])), refs[4:])
+
+        def loader(kk, limit):
+            return (ck.decode_lanes(kp_ref[0]) * e8m0_decode(ks_ref[0]),
+                    cv.decode_lanes(vp_ref[0]) * e8m0_decode(vs_ref[0]))
+
+        return loader, None, refs[4:]
 
     kern = functools.partial(
         _kernel, load_kv=load_kv, causal=causal, scale=hd ** -0.5,

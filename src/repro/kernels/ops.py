@@ -38,7 +38,8 @@ __all__ = ["exsdotp_gemm", "blockscale_gemm", "blockscale_blocks",
            "mx_pack", "mx_unpack", "mx_gemm_packed",
            "mx_quantize_kv", "mx_flash_attention",
            "mx_flash_attention_packed", "attention_blocks",
-           "resolve_impl"]
+           "decode_attention", "mx_decode_attention_packed",
+           "decode_attention_blocks", "resolve_impl"]
 
 
 def resolve_impl(impl: str) -> str:
@@ -394,6 +395,78 @@ def mx_flash_attention_packed(q: jax.Array, kp: jax.Array, ks8: jax.Array,
     bq, bk = blocks
     return mx_flash_attention_pallas(
         q, kp, ks8, vp, vs8, mx_k=mx_k, mx_v=mx_v, causal=causal,
+        block_q=block_q or bq, block_k=block_k or bk,
+        interpret=(impl == "pallas_interpret"))
+
+
+def decode_attention_blocks(s: int, t: int) -> tuple[int, int]:
+    """(block_q, block_k) for a decode sweep over S query rows × T cache
+    slots.  Unlike ``attention_blocks`` this never fails: decode S is
+    often 1 (or a prompt length with no structure), so the q tile falls
+    through the pow2 ladder down to 1 and the KV tile down to 8.  Tiles
+    below the sublane/lane units are interpret/CPU-only — the same
+    legality convention as the §11 kernels; real-TPU serving picks
+    aligned page sizes.
+    """
+    def pick(n, floor):
+        for b in (128, 64, 32, 16, 8, 4, 2, 1):
+            if b >= floor and n % b == 0:
+                return b
+        return 1
+
+    return pick(s, 1), pick(t, 8)
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     lens: jax.Array, *, block_q=None, block_k=None,
+                     impl: str = "auto") -> jax.Array:
+    """Serving attention over a carrier-precision cache (DESIGN.md §12).
+
+    ``q [BH, S, hd]`` rows at absolute slots ``lens + i`` against cache
+    ``k/v [BH, T, hd]``; slots beyond the live prefix ``lens + S`` are
+    structurally excluded (garbage pages).  Pallas impls run the
+    base-offset online-softmax sweep with the page-skip; the xla branch
+    is ``ref.decode_attention_ref`` — identical math.
+    """
+    from .decode_attention import decode_attention_pallas
+    impl = resolve_impl(impl)
+    if impl == "xla":
+        return ref.decode_attention_ref(q, k, v, lens)
+    bq, bk = decode_attention_blocks(q.shape[1], k.shape[1])
+    return decode_attention_pallas(
+        q, k, v, lens, block_q=block_q or bq, block_k=block_k or bk,
+        interpret=(impl == "pallas_interpret"))
+
+
+def mx_decode_attention_packed(q: jax.Array, kp: jax.Array, ks8: jax.Array,
+                               vp: jax.Array, vs8: jax.Array,
+                               lens: jax.Array, *, mx_k, mx_v=None,
+                               block_q=None, block_k=None,
+                               impl: str = "auto") -> jax.Array:
+    """Serving attention straight from the packed paged KV cache
+    (DESIGN.md §12) — the decode analogue of
+    ``mx_flash_attention_packed``.
+
+    ``(kp, ks8)`` / ``(vp, vs8)`` are gathered page slots in
+    ``mx_quantize_kv`` layout; ``lens [BH]`` the live lengths.  On the
+    Pallas impls the packed slots decode in-register per KV tile
+    (``mx_decode_attention_pallas``); the xla branch dequantizes (exact
+    — pow2 scales) and runs the masked reference.  Garbage slots beyond
+    ``lens + S`` are excluded structurally on every impl, so stale
+    NaN-scale poison in freed pages never reaches live rows.
+    """
+    from .decode_attention import mx_decode_attention_pallas
+    impl = resolve_impl(impl)
+    mx_k = get_mx_format(mx_k)
+    mx_v = mx_k if mx_v is None else get_mx_format(mx_v)
+    hd = q.shape[-1]
+    if impl == "xla":
+        kf = mx_dequantize_packed(kp, ks8, mx_k, k=hd)
+        vf = mx_dequantize_packed(vp, vs8, mx_v, k=hd)
+        return ref.decode_attention_ref(q, kf, vf, lens)
+    bq, bk = decode_attention_blocks(q.shape[1], kp.shape[1])
+    return mx_decode_attention_pallas(
+        q, kp, ks8, vp, vs8, lens, mx_k=mx_k, mx_v=mx_v,
         block_q=block_q or bq, block_k=block_k or bk,
         interpret=(impl == "pallas_interpret"))
 

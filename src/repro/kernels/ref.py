@@ -16,7 +16,8 @@ from ..core.scaling import expand_group_scales
 
 __all__ = ["exsdotp_gemm_ref", "quant_blockwise_ref", "blockscale_gemm_ref",
            "mx_quant_ref", "mx_gemm_ref", "flash_attention_ref",
-           "mx_flash_attention_ref"]
+           "mx_flash_attention_ref", "decode_attention_ref",
+           "mx_decode_attention_ref"]
 
 
 def exsdotp_gemm_ref(a: jax.Array, b: jax.Array, scale=1.0,
@@ -132,6 +133,84 @@ def flash_attention_ref(q, k, v, *, causal=True):
     w = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bqk,bkd->bqd", w,
                       v.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, lens, *, neg=-1e30):
+    """Decode attention oracle (pure jnp — the serving xla branch).
+
+    ``q [BH, S, hd]`` rows sit at absolute cache slots ``lens + i``
+    against a cache ``k/v [BH, T, hd]`` whose live prefix is
+    ``lens + S`` per sequence-head; garbage slots beyond it are zeroed
+    *structurally* (both operands, before any dot) so stale non-finite
+    trash in dead cache slots cannot reach live rows.  Mirrors the
+    kernel's operation order — masked logits at ``-1e30`` (not -inf),
+    row max, ``p = exp(s - m)``, one division by ``max(l, 1e-30)`` —
+    so exact-arithmetic operands reproduce it bitwise.
+    """
+    bh, s, hd = q.shape
+    t = k.shape[1]
+    lens = jnp.asarray(lens, jnp.int32)
+    cols = jnp.arange(t)[None, :]                      # [1, T]
+    good = cols < (lens[:, None] + s)                  # [BH, T] live prefix
+    kf = jnp.where(good[..., None], k.astype(jnp.float32), 0.0)
+    vf = jnp.where(good[..., None], v.astype(jnp.float32), 0.0)
+    scale = jnp.float32(hd ** -0.5)
+    sc = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), kf) * scale
+    rows = lens[:, None, None] + jnp.arange(s)[None, :, None]  # [BH, S, 1]
+    sc = jnp.where(cols[:, None, :] <= rows, sc, jnp.float32(neg))
+    m = jnp.max(sc, axis=-1, keepdims=True)
+    p = jnp.exp(sc - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    acc = jnp.einsum("bqk,bkd->bqd", p, vf)
+    return (acc / jnp.maximum(l, 1e-30)).astype(q.dtype)
+
+
+def mx_decode_attention_ref(q, k, v, lens, *, mx_k, mx_v=None):
+    """Numpy oracle for the packed-cache decode attention kernel.
+
+    Takes *high-precision* cache contents ``k/v [BH, T, hd]``,
+    quantizes them with the numpy MX mirrors (per row × group-of-32
+    along hd — exactly what ``ops.mx_quantize_kv`` stores in the page
+    pool), and computes the base-offset masked attention of
+    ``decode_attention_ref`` in pure numpy, mirroring the kernel's
+    operation order (m → p → l → Σp·v → one division).
+
+    Masked and garbage keys are excluded from the weighted sum
+    *structurally* (the p·v products are zeroed, not merely weighted by
+    an underflowed exp) — matching the kernel's carry/page-skip and
+    garbage masking.  NaN-scale poison inside the *fully visible*
+    region propagates identically in both; tests keep poison out of
+    the partially-masked diagonal band (same §11 caveat as
+    ``mx_flash_attention_ref``).  Returns ``[BH, S, hd]`` as q.dtype.
+    """
+    mx_k = get_mx_format(mx_k)
+    mx_v = mx_k if mx_v is None else get_mx_format(mx_v)
+    qf = np.asarray(q, np.float32)
+    lens = np.asarray(lens, np.int32)
+    bh, s, hd = qf.shape
+    t = np.asarray(k).shape[1]
+    kq, ks = F.mx_quantize_np(np.asarray(k, np.float32), mx_k)
+    vq, vs = F.mx_quantize_np(np.asarray(v, np.float32), mx_v)
+    kf = F.mx_dequantize_np(kq, ks, mx_k).astype(np.float32)
+    vf = F.mx_dequantize_np(vq, vs, mx_v).astype(np.float32)
+    cols = np.arange(t)[None, :]                       # [1, T]
+    good = cols < (lens[:, None] + s)                  # [BH, T]
+    kf = np.where(good[..., None], kf, np.float32(0))
+    vf = np.where(good[..., None], vf, np.float32(0))
+    scale = np.float32(hd ** -0.5)
+    with np.errstate(invalid="ignore", over="ignore"):
+        sc = np.einsum("bqd,bkd->bqk", qf, kf).astype(np.float32) * scale
+        rows = lens[:, None, None] + np.arange(s)[None, :, None]
+        valid = cols[:, None, :] <= rows               # [BH, S, T]
+        sc = np.where(valid, sc, np.float32(-1e30))
+        m = sc.max(axis=-1, keepdims=True)
+        p = np.exp(sc - m)
+        l = p.sum(axis=-1, keepdims=True, dtype=np.float32)
+        pv = p[..., None] * vf[:, None, :, :]          # [BH, S, T, hd]
+        pv = np.where(valid[..., None], pv, np.float32(0))
+        acc = pv.sum(axis=-2, dtype=np.float32)
+        out = acc / np.maximum(l, np.float32(1e-30))
+    return out.astype(np.asarray(q).dtype)
 
 
 def mx_flash_attention_ref(q, k, v, *, mx_k, mx_v=None, causal=True):

@@ -382,3 +382,37 @@ def format_packed_footprint(policy) -> str:
     lines.append(f"  fwd wire    {fp['fwd_wire_fraction_vs_bf16']:.3f}x "
                  f"of bf16 bytes")
     return "\n".join(lines)
+
+
+def serve_cache_footprint(cfg, policy, max_len, page_size=16) -> dict:
+    """Serving KV-cache bytes per sequence under ``policy``'s paged
+    pool (DESIGN.md §12) vs the bf16 carrier baseline of the same
+    geometry — what the packed page pool saves at decode time."""
+    from ..core.policy import get_policy
+    from ..serve.kv_cache import paged_kv_applicable, paged_kv_bytes_per_seq
+
+    pol = get_policy(policy)
+    packed = paged_kv_applicable(cfg, pol)
+    bytes_seq = paged_kv_bytes_per_seq(cfg, pol, max_len,
+                                       page_size=page_size)
+    carrier = paged_kv_bytes_per_seq(cfg, get_policy("bf16"), max_len,
+                                     page_size=page_size)
+    return {"policy": pol.name,
+            "cache_format": pol.mx_kv_cache_name if packed else
+            "carrier-bf16",
+            "max_len": max_len, "page_size": page_size,
+            "cache_bytes_per_seq": bytes_seq,
+            "bf16_bytes_per_seq": carrier,
+            "compression_vs_bf16": carrier / bytes_seq}
+
+
+def format_serve_cache_footprint(cfg, policy, max_len,
+                                 page_size=16) -> str:
+    """One-block human summary of ``serve_cache_footprint`` for the
+    serving drivers."""
+    fp = serve_cache_footprint(cfg, policy, max_len, page_size=page_size)
+    return (f"[{fp['policy']}] serving KV cache ({fp['cache_format']}, "
+            f"max_len={fp['max_len']}, page={fp['page_size']}): "
+            f"{fp['cache_bytes_per_seq']} B/seq "
+            f"({fp['compression_vs_bf16']:.2f}x smaller than bf16 "
+            f"{fp['bf16_bytes_per_seq']} B/seq)")

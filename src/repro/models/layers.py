@@ -277,6 +277,19 @@ def attention(x, p, cfg, policy, *, positions, kv_cache=None, cross_kv=None,
         k, v = cross_kv
         causal = False
 
+    if kv_cache is not None and "pt" in kv_cache:
+        # paged serving cache (DESIGN.md §12): append the new rows into
+        # the page pool (packed MX payloads or carrier pages) and run
+        # the decode kernel against the gathered page slots.  RoPE was
+        # applied above with per-sequence absolute positions [B, S].
+        from ..serve.kv_cache import paged_attend
+        out, new_kv = paged_attend(q, k, v, kv_cache["kv"], kv_cache["pt"],
+                                   kv_cache["lens"], cfg=cfg, policy=policy,
+                                   impl=impl)
+        out = out.reshape(b, s, cfg.n_heads * hd)
+        out = proj(out, p["wo"], None, policy, rules, impl, kind="row")
+        return out, new_kv
+
     new_cache = None
     kv_valid_len = None
     if kv_cache is not None:

@@ -36,6 +36,10 @@ class ModelApi:
     apply: Callable          # (params, tokens, aux=None, ...) -> (logits, aux_loss)
     init_cache: Callable     # (batch, max_len) -> cache
     decode_step: Callable    # (params, tok[B], cache, ...) -> (logits[B,V], cache)
+    #: decode_step also accepts tok [B, S] (block prefill: S tokens
+    #: appended in one call, full [B, S, V] logits back) — attention
+    #: families; recurrent families step strictly one token at a time.
+    block_decode: bool = False
 
     def loss(self, params, tokens, aux=None, **kw):
         """Next-token cross-entropy, vocab-parallel safe.
@@ -201,32 +205,67 @@ def build_dense(cfg: ModelConfig) -> ModelApi:
             x = x[:, -tokens.shape[1]:]
         return _head(params, x, cfg, pol, rules, impl), aux_loss
 
-    def init_cache(batch, max_len):
+    def init_cache(batch, max_len, *, paged=None, page_size=16):
+        """paged=None -> paged pool iff the policy has a packed cache
+        format for this head dim; True forces paging (carrier pages
+        when packing doesn't apply — the bf16 fallback); False keeps
+        the contiguous carrier strip."""
+        from ..serve import kv_cache as KV
+        if paged is None:
+            paged = KV.paged_kv_applicable(cfg, policy)
+        if paged:
+            kv, pt, lens = KV.init_paged_kv(cfg, policy, batch, max_len,
+                                            page_size=page_size, dtype=dtype)
+            stacked = jax.tree.map(lambda v: jnp.broadcast_to(
+                v, (cfg.n_layers,) + v.shape).copy(), kv)
+            return {"kv": stacked, "pt": pt, "lens": lens}
         kv = L.init_kv_cache(cfg, batch, max_len, dtype)
         return {"kv": jax.tree.map(
             lambda v: jnp.broadcast_to(v, (cfg.n_layers,) + v.shape).copy()
             if v.ndim else jnp.zeros((cfg.n_layers,), v.dtype), kv)}
 
     def decode_step(params, tok, cache, *, rules=None, impl="auto"):
-        x = _embed(params, tok[:, None], cfg, rules)
-        idx = cache["kv"]["idx"][0]
-        positions = jnp.arange(1) + idx
+        tok2 = tok if tok.ndim == 2 else tok[:, None]
+        s = tok2.shape[1]
+        x = _embed(params, tok2, cfg, rules)
+        if "pt" in cache:
+            pt, lens = cache["pt"], cache["lens"]
+            positions = lens[:, None] + jnp.arange(s)  # [B, S] per-seq
 
-        def body(carry, inp):
-            x, _ = carry
-            lp, kvc = inp
-            x, aux, new_kv = _decoder_layer(
-                x, lp, cfg, policy, positions=positions, kv_cache=kvc,
-                rules=rules, impl=impl)
-            return (x, aux), new_kv
+            def body(carry, inp):
+                x, _ = carry
+                lp, kvc = inp
+                x, aux, new_kv = _decoder_layer(
+                    x, lp, cfg, policy, positions=positions,
+                    kv_cache={"kv": kvc, "pt": pt, "lens": lens},
+                    rules=rules, impl=impl)
+                return (x, aux), new_kv
 
-        (x, _), new_kv = jax.lax.scan(
-            body, (x, jnp.zeros((), jnp.float32)),
-            (params["layers"], cache["kv"]))
+            (x, _), new_kv = jax.lax.scan(
+                body, (x, jnp.zeros((), jnp.float32)),
+                (params["layers"], cache["kv"]))
+            new_cache = {"kv": new_kv, "pt": pt, "lens": lens + s}
+        else:
+            idx = cache["kv"]["idx"][0]
+            positions = jnp.arange(s) + idx
+
+            def body(carry, inp):
+                x, _ = carry
+                lp, kvc = inp
+                x, aux, new_kv = _decoder_layer(
+                    x, lp, cfg, policy, positions=positions, kv_cache=kvc,
+                    rules=rules, impl=impl)
+                return (x, aux), new_kv
+
+            (x, _), new_kv = jax.lax.scan(
+                body, (x, jnp.zeros((), jnp.float32)),
+                (params["layers"], cache["kv"]))
+            new_cache = {"kv": new_kv}
         logits = _head(params, x, cfg, policy, rules, impl)
-        return logits[:, 0], {"kv": new_kv}
+        return (logits if tok.ndim == 2 else logits[:, 0]), new_cache
 
-    return ModelApi(cfg, init, apply, init_cache, decode_step)
+    return ModelApi(cfg, init, apply, init_cache, decode_step,
+                    block_decode=True)
 
 
 # ---------------------------------------------------------------------------
@@ -339,11 +378,13 @@ def build_encdec(cfg: ModelConfig) -> ModelApi:
         return {**cache, "cross": (ck.astype(dtype), cv.astype(dtype))}
 
     def decode_step(params, tok, cache, *, rules=None, impl="auto"):
-        x = _embed(params, tok[:, None], cfg, rules)
+        tok2 = tok if tok.ndim == 2 else tok[:, None]
+        s = tok2.shape[1]
+        x = _embed(params, tok2, cfg, rules)
         idx = cache["kv"]["idx"][0]
         x = x + jax.lax.dynamic_slice_in_dim(
-            params["dec_pos"], idx, 1, 0)[None].astype(x.dtype)
-        positions = jnp.arange(1) + idx
+            params["dec_pos"], idx, s, 0)[None].astype(x.dtype)
+        positions = jnp.arange(s) + idx
 
         def body(carry, inp):
             x, _ = carry
@@ -358,9 +399,11 @@ def build_encdec(cfg: ModelConfig) -> ModelApi:
             (params["layers"], cache["kv"],
              cache["cross"][0], cache["cross"][1]))
         logits = _head(params, x, cfg, policy, rules, impl)
-        return logits[:, 0], {**cache, "kv": new_kv}
+        return (logits if tok.ndim == 2 else logits[:, 0]), {**cache,
+                                                             "kv": new_kv}
 
-    api = ModelApi(cfg, init, apply, init_cache, decode_step)
+    api = ModelApi(cfg, init, apply, init_cache, decode_step,
+                   block_decode=True)
     api.prefill_cache = prefill_cache
     return api
 

@@ -4,10 +4,19 @@
 one new token against a KV/state cache of ``seq_len``. Sampling is greedy
 or temperature-categorical; generation loops on the host (one jitted step
 per token) exactly like a production decode server.
+
+``generate`` prefills the prompt in ONE ``decode_step`` call when the
+model supports block decode (attention families — [B, S] tokens in,
+[B, S, V] logits out) and falls back to per-token cache fill for the
+recurrent families.  Under an MX policy the cache defaults to the
+packed paged pool (``serve.kv_cache``); ``paged=False`` forces the
+contiguous carrier strip.  For mid-flight admission and page-level
+scheduling, see ``serve.scheduler.ContinuousBatcher``.
 """
 from __future__ import annotations
 
 import functools
+import inspect
 from typing import Optional
 
 import jax
@@ -32,21 +41,36 @@ def make_serve_fns(model, *, rules=None, impl: str = "auto"):
     return prefill, serve_step
 
 
+def _init_cache(model, batch, max_len, paged, page_size):
+    kw = {}
+    if "paged" in inspect.signature(model.init_cache).parameters:
+        kw = {"paged": paged, "page_size": page_size}
+    return model.init_cache(batch, max_len, **kw)
+
+
 def generate(model, params, prompt, *, max_new_tokens: int, max_len: int,
              temperature: float = 0.0, key=None, rules=None,
-             impl: str = "auto", aux=None):
+             impl: str = "auto", aux=None, paged=None, page_size: int = 16):
     """Greedy/temperature decoding from a [B, S] prompt."""
+    if temperature > 0.0 and key is None:
+        raise ValueError("temperature>0 requires key=")
     b, s = prompt.shape
-    cache = model.init_cache(b, max_len)
+    cache = _init_cache(model, b, max_len, paged, page_size)
     if model.cfg.family == "encdec" and aux is not None:
         cache = model.prefill_cache(params, aux["frames"], cache,
                                     rules=rules, impl=impl)
     step = jax.jit(functools.partial(model.decode_step, rules=rules,
                                      impl=impl))
-    # feed the prompt token by token (cache fill)
-    logits = None
-    for i in range(s):
-        logits, cache = step(params, prompt[:, i], cache)
+    if getattr(model, "block_decode", False):
+        # block prefill: the whole prompt in one step (paged caches
+        # scatter S rows at once; carrier caches fill slots 0..S-1)
+        logits, cache = step(params, prompt, cache)
+        logits = logits[:, -1]
+    else:
+        # recurrent families: strict per-token cache fill
+        logits = None
+        for i in range(s):
+            logits, cache = step(params, prompt[:, i], cache)
     toks = []
     tok = None
     for i in range(max_new_tokens):

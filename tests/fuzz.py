@@ -163,6 +163,54 @@ def exact_attention_operands(rng, bh, s, t, hd, *, causal=True,
     return (q, k.astype(np.float32), v.astype(np.float32))
 
 
+def exact_decode_operands(rng, bh, s, t, hd, lens, *, specials=False,
+                          garbage=True):
+    """Decode-attention operands on which the base-offset online
+    softmax is *exact* — the paged-cache kernel is bitwise equal to the
+    straight-softmax oracle in any block order.  Returns
+    ``(q, k, v, lens)`` with f32 operands and int32 lens.
+
+    Same construction as ``exact_attention_operands`` shifted by the
+    per-sequence history length: q row ``i`` of sequence ``b`` sits at
+    absolute cache slot ``lens[b] + i`` and is one-hot at carrier
+    column ``(lens[b] + i) % hd`` with value 8.  Survivor keys (carrier
+    value 0 among -256 suppressors, pow2 count ≤ lens[b]+1) are placed
+    at indices ``<= lens[b]`` — inside *every* query row's visible
+    prefix, so no survivor is ever causally masked.
+
+    ``garbage=True`` fills cache slots beyond each sequence's live
+    prefix ``lens[b] + s`` with NaN — the stale-freed-page regime the
+    kernels must exclude structurally (output must stay finite).
+
+    ``specials=True`` additionally poisons one *fully visible* v group
+    (NaN at slot ``min(lens)``, head columns 0..31): every query row of
+    every sequence attends that slot (survivor → NaN·p, suppressed →
+    NaN·0 = NaN in f32), so all outputs go NaN in exactly those
+    columns, identically in kernel and oracle.
+    """
+    vals = np.asarray([0.0, 64.0, -64.0, 128.0, -128.0, 256.0, -256.0])
+    lens = np.asarray(lens, np.int32)
+    assert lens.shape == (bh,) and (lens + s <= t).all(), (lens, s, t)
+    assert (lens >= 1).all(), lens   # slot min(lens) visible to every row
+    q = np.zeros((bh, s, hd), np.float32)
+    k = np.full((bh, t, hd), -256.0)
+    for b in range(bh):
+        cols = (int(lens[b]) + np.arange(s)) % hd
+        q[b, np.arange(s), cols] = 8.0
+        avail = int(lens[b]) + 1
+        for c in np.unique(cols):
+            count = int(rng.choice([n for n in (1, 2, 4) if n <= avail]))
+            k[b, rng.choice(avail, size=count, replace=False), c] = 0.0
+    v = rng.choice(vals, size=(bh, t, hd))
+    if specials:
+        v[:, int(lens.min()), :32] = np.nan
+    if garbage:
+        for b in range(bh):
+            k[b, int(lens[b]) + s:] = np.nan
+            v[b, int(lens[b]) + s:] = np.nan
+    return q, k.astype(np.float32), v.astype(np.float32), lens
+
+
 def exact_mx_operands(rng, m, k, n, mx, span=16, specials=True):
     """GEMM operands on which every fp32 intermediate is exact.
 
