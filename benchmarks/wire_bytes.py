@@ -29,10 +29,19 @@ streams per layer under each MX policy's ``mx_attn`` format — mxfp4 KV
 must measure 0.53125 B/elem, same arithmetic as the GEMM payloads but
 with groups along the head dimension.
 
+A fifth section (``dp_grad``) measures the compressed DP gradient wire
+(DESIGN.md §13): bytes one replica ships per step (packed payloads +
+E8M0 grids under ``Policy.mx_dp_grad``, per-leaf fp8 otherwise) and the
+single-step NMSE vs the exact mean on an outlier-heavy gradient tree —
+packed MXFP6 must ship <=0.40x the bf16 bytes at NMSE no worse than the
+per-leaf fp8 path.  A sixth (``moe_a2a``) compiles the expert-parallel
+MoE dispatch per policy and counts its all-to-all bytes plus the
+dispatch wire's roundtrip NMSE.
+
 This doubles as CI's regression gate: ``--check BASELINE`` fails
 (exit 1) if any policy's wire bytes — or its packed-pipeline HBM /
-packed-KV bytes — regress >10% over the committed baseline
-(``benchmarks/baselines/wire_bytes.json``).
+packed-KV / DP-gradient / MoE-dispatch bytes and NMSE — regress >10%
+over the committed baseline (``benchmarks/baselines/wire_bytes.json``).
 
 Run:
     PYTHONPATH=src python -m benchmarks.wire_bytes [--quick]
@@ -179,6 +188,111 @@ def measure(quick=False):
             "total_bytes": payload + scales,
             "bytes_per_element": (payload + scales) / (2 * bh * t * hd),
         }
+
+    # compressed DP gradient wire (DESIGN.md §13): bytes one replica
+    # ships per step and single-step NMSE vs the exact mean, on an
+    # outlier-heavy gradient tree — the regime where the per-leaf f32
+    # scale flushes everything but the hot leaf's outlier and the
+    # group-32 E8M0 grids keep resolving the rest.
+    from repro.optim.grad_compress import (compressed_psum_mean,
+                                           dp_wire_bytes_per_step,
+                                           error_feedback_init)
+    gshapes = {"w_in": (64, 256), "w_out": (256, 64), "bias": (256,),
+               "emb": (96, 64)}
+    gtree = {}
+    for gname, sh in gshapes.items():
+        g = rng.normal(0, 1e-3, sh)
+        flatg = g.reshape(-1)
+        # sparse, *severe* outliers (2^36: enough to push the rest of
+        # the leaf below fp8-e5m2's subnormal floor under one shared
+        # f32 scale) — the laundering regime group-32 grids resolve
+        hot = rng.integers(flatg.size, size=max(1, flatg.size // 4096))
+        flatg[hot] *= 2.0 ** 36
+        gtree[gname] = jnp.asarray(flatg.reshape(sh), jnp.float32)
+    n_elems = sum(int(np.prod(sh)) for sh in gshapes.values())
+    bf16_bytes = 2 * n_elems
+
+    def row_nmse(red):
+        # row-normalized (256-element spans) so the handful of outliers
+        # can't launder the flushed mass out of the metric — same
+        # normalization idea as the TP section's per-row MSE
+        ratios = []
+        for gname, g in gtree.items():
+            ref = np.asarray(g, np.float64).reshape(-1)
+            err = np.asarray(red[gname], np.float64).reshape(-1) - ref
+            rows = -(-ref.size // 256) * 256
+            refp = np.zeros(rows); refp[:ref.size] = ref
+            errp = np.zeros(rows); errp[:ref.size] = err
+            pw = (refp.reshape(-1, 256) ** 2).sum(1)
+            ratios.append(((errp.reshape(-1, 256) ** 2).sum(1)[pw > 0]
+                           / pw[pw > 0]))
+        return float(np.mean(np.concatenate(ratios)))
+
+    report["dp_grad"] = {"elements": n_elems, "bf16_bytes": bf16_bytes}
+    ef0 = error_feedback_init(gtree)
+    for pname in ("fp8_leaf", "mxfp8", "mxfp6", "mxfp4"):
+        mx = None if pname == "fp8_leaf" else get_policy(pname).mx_dp_grad
+        with set_mesh(mesh):
+            red, _ = jax.jit(lambda g, e: compressed_psum_mean(
+                g, e, mesh, "data", mx=mx))(gtree, ef0)
+        wire = dp_wire_bytes_per_step(gtree, mx=mx)
+        report["dp_grad"][pname] = {
+            "format": mx or "fp8e5m2_per_leaf",
+            "wire_bytes": wire,
+            "bytes_vs_bf16": wire / bf16_bytes,
+            "nmse": row_nmse(red),
+        }
+    # the tentpole's acceptance bar: packed MXFP6 gradient wire ships
+    # <=0.40x the bf16 bytes at NMSE no worse than the per-leaf fp8 path
+    assert report["dp_grad"]["mxfp6"]["bytes_vs_bf16"] <= 0.40, \
+        report["dp_grad"]["mxfp6"]
+    assert (report["dp_grad"]["mxfp6"]["nmse"]
+            <= report["dp_grad"]["fp8_leaf"]["nmse"]), report["dp_grad"]
+
+    # MoE dispatch all-to-all (DESIGN.md §13): compile the EP path per
+    # policy on the same mesh and count its all-to-all bytes through
+    # hlo_analysis (packed payloads + E8M0 grids under MX policies, raw
+    # carrier bf16 otherwise), plus the dispatch wire's roundtrip NMSE
+    # on the send buffer.
+    import dataclasses as _dc
+
+    from repro.configs import get_arch
+    from repro.models import moe as MOE
+    from repro.parallel.tp_gemm import _deq_mx, _quant_mx
+    from repro.core.formats import get_mx_format
+    mcfg = get_arch("granite-moe-3b-a800m")
+    mcfg = _dc.replace(mcfg, d_model=64, d_ff=128, n_experts=8, top_k=2,
+                       capacity_factor=1.5, moe_dense_ff=0)
+    mp = MOE.init_moe(jax.random.PRNGKey(0), mcfg, jnp.bfloat16)
+    xm = jnp.asarray(rng.normal(0, 1, (4, 32, mcfg.d_model)), jnp.bfloat16)
+    buf = jnp.asarray(rng.normal(0, 1, (4, 96, mcfg.d_model)), jnp.float32)
+    report["moe_a2a"] = {}
+    for pname in ("bf16", "mxfp8", "mxfp6", "mxfp4"):
+        pol = get_policy(pname)
+        with set_mesh(mesh):
+            fn = jax.jit(lambda x, p: MOE.moe_ffn_ep(
+                x, p, mcfg, pol, rules=rules)[0])
+            hlo = fn.lower(xm, mp).compile().as_text()
+        res = analyze(hlo)
+        a2a = res["coll_bytes"].get("all-to-all", 0.0)
+        if pol.mx:
+            mxf = get_mx_format(pol.mx_fwd)
+            deq = _deq_mx(*_quant_mx(buf, mxf), mxf)
+            nmse = float(jnp.mean((deq - buf) ** 2)
+                         / jnp.mean(buf ** 2))
+        else:
+            nmse = float(jnp.mean(
+                (buf.astype(jnp.bfloat16).astype(jnp.float32) - buf) ** 2)
+                / jnp.mean(buf ** 2))
+        report["moe_a2a"][pname] = {
+            "format": pol.mx_fwd or "bf16",
+            "a2a_bytes": a2a,
+            "coll_total": res["coll_total"],
+            "dispatch_nmse": nmse,
+        }
+    # packed wires must actually shrink the hop vs the carrier a2a
+    assert (report["moe_a2a"]["mxfp6"]["a2a_bytes"]
+            < report["moe_a2a"]["bf16"]["a2a_bytes"]), report["moe_a2a"]
     return report
 
 
@@ -227,6 +341,37 @@ def check(report, baseline_path, tol=1.10):
               f"{b['total_bytes']} ({ratio:.3f}x) {status}")
         if ratio > tol:
             failed.append(f"attn_kv:{pname}")
+    # compressed DP gradient wire (§13): both the shipped bytes and the
+    # outlier-sweep NMSE are gated — un-packing the payload or breaking
+    # the group grids shows up in one or the other
+    for pname, rec in report.get("dp_grad", {}).items():
+        b = base.get("dp_grad", {}).get(pname)
+        if not isinstance(rec, dict) or b is None:
+            continue
+        br = rec["wire_bytes"] / max(b["wire_bytes"], 1.0)
+        nr = rec["nmse"] / max(b["nmse"], 1e-300)
+        status = "OK" if (br <= tol and nr <= tol) else "REGRESSED"
+        print(f"dp-grad {pname}: {rec['wire_bytes']} B ({br:.3f}x), "
+              f"nmse {rec['nmse']:.3e} ({nr:.3f}x) {status}")
+        if br > tol:
+            failed.append(f"dp_grad:{pname}:bytes")
+        if nr > tol:
+            failed.append(f"dp_grad:{pname}:nmse")
+    # MoE dispatch all-to-all (§13): same two-sided gate on the EP
+    # path's collective bytes and the dispatch roundtrip NMSE
+    for pname, rec in report.get("moe_a2a", {}).items():
+        b = base.get("moe_a2a", {}).get(pname)
+        if b is None:
+            continue
+        br = rec["a2a_bytes"] / max(b["a2a_bytes"], 1.0)
+        nr = rec["dispatch_nmse"] / max(b["dispatch_nmse"], 1e-300)
+        status = "OK" if (br <= tol and nr <= tol) else "REGRESSED"
+        print(f"moe-a2a {pname}: {rec['a2a_bytes']:.0f} B ({br:.3f}x), "
+              f"nmse {rec['dispatch_nmse']:.3e} ({nr:.3f}x) {status}")
+        if br > tol:
+            failed.append(f"moe_a2a:{pname}:bytes")
+        if nr > tol:
+            failed.append(f"moe_a2a:{pname}:nmse")
     return failed
 
 

@@ -63,6 +63,16 @@ class Policy:
     #: ``mx_fwd``.  q and the (m, l, acc) state stay in the carrier /
     #: f32 — only the streamed KV operands narrow.
     mx_attn: str = ""
+    #: MX format for the cross-replica DP gradient wire (DESIGN.md §13):
+    #: ``optim.grad_compress.compressed_psum_mean`` ships each gradient
+    #: leaf as packed codec payloads + E8M0 group grids (groups of 32
+    #: over the flattened leaf, leaves padded to whole groups) instead
+    #: of the per-leaf single-scale FP8 path, with per-leaf error
+    #: feedback absorbing the group-quantization residual.  Gradients
+    #: are the range-hungry side, so each policy uses its *backward*
+    #: element format here; empty keeps the legacy per-leaf FP8-E5M2
+    #: wire.
+    mx_dp_grad: str = ""
     #: MX element format for the *serving* KV cache (DESIGN.md §12):
     #: decode caches store packed codec payloads + E8M0 scale codes in
     #: fixed-size page slots instead of carrier-precision tensors, and
@@ -132,6 +142,7 @@ MXFP8 = Policy("mxfp8", jnp.float8_e4m3, jnp.float8_e5m2,
                jnp.bfloat16, jnp.float32,
                mx_fwd="mxfp8e4m3", mx_bwd="mxfp8e5m2",
                mx_attn="mxfp8e4m3", mx_kv_cache="mxfp8e4m3",
+               mx_dp_grad="mxfp8e5m2",
                loss_scaling=True)
 #: Sub-byte MX training policies (DESIGN.md §10): payloads stay packed
 #: (0.75 / 0.5 B per element) from the quantize kernel through the GEMM
@@ -145,12 +156,14 @@ MXFP6 = Policy("mxfp6", jnp.float8_e4m3, jnp.float8_e5m2,
                mx_fwd="mxfp6e2m3", mx_bwd="mxfp6e3m2",
                mx_wgrad_act="mxfp8e4m3", mx_wgrad_grad="mxfp8e5m2",
                mx_attn="mxfp6e2m3", mx_kv_cache="mxfp6e2m3",
+               mx_dp_grad="mxfp6e3m2",
                loss_scaling=True)
 MXFP4 = Policy("mxfp4", jnp.float8_e4m3, jnp.float8_e5m2,
                jnp.bfloat16, jnp.float32,
                mx_fwd="mxfp4e2m1", mx_bwd="mxfp8e5m2",
                mx_wgrad_act="mxfp8e4m3", mx_wgrad_grad="mxfp8e5m2",
                mx_attn="mxfp4e2m1", mx_kv_cache="mxfp4e2m1",
+               mx_dp_grad="mxfp4e2m1",
                loss_scaling=True)
 BF16 = Policy("bf16", None, None, jnp.bfloat16, jnp.float32)
 FP16 = Policy("fp16", None, None, jnp.float16, jnp.float32,

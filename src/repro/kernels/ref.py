@@ -17,7 +17,8 @@ from ..core.scaling import expand_group_scales
 __all__ = ["exsdotp_gemm_ref", "quant_blockwise_ref", "blockscale_gemm_ref",
            "mx_quant_ref", "mx_gemm_ref", "flash_attention_ref",
            "mx_flash_attention_ref", "decode_attention_ref",
-           "mx_decode_attention_ref"]
+           "mx_decode_attention_ref", "compressed_mean_mx_ref",
+           "mx_dispatch_wire_ref"]
 
 
 def exsdotp_gemm_ref(a: jax.Array, b: jax.Array, scale=1.0,
@@ -211,6 +212,58 @@ def mx_decode_attention_ref(q, k, v, lens, *, mx_k, mx_v=None):
         acc = pv.sum(axis=-2, dtype=np.float32)
         out = acc / np.maximum(l, np.float32(1e-30))
     return out.astype(np.asarray(q).dtype)
+
+
+def compressed_mean_mx_ref(grads, efs, *, mx):
+    """Numpy oracle for the MX DP gradient wire (DESIGN.md §13).
+
+    ``grads``/``efs`` are length-``n`` lists of same-shaped arrays, one
+    per source replica.  Mirrors ``optim.grad_compress._leaf_mx``
+    source by source: ``gc = g + e`` flattens, zero-pads to whole
+    groups of ``mx.group``, quantizes with the numpy MX mirrors
+    (E8M0 pow2 scales, NaN-scale poison for non-finite groups), and the
+    mean of the *dequantized* streams — sliced back to the original
+    shape — is what every receiver computes.  New error feedback is the
+    local residual, reset to zero when non-finite (the wire's carried
+    state must stay clean even on poisoned steps).
+
+    Returns ``(mean, new_efs)``; pure numpy, f64 accumulation — exact
+    whenever the jax path's chunked f32 accumulation is (the
+    exact-arithmetic operand harness guarantees both).
+    """
+    mx = get_mx_format(mx)
+    shape = np.asarray(grads[0]).shape
+    size = int(np.prod(shape))
+    kp = -(-size // mx.group) * mx.group
+    deqs, new_efs = [], []
+    with np.errstate(invalid="ignore", over="ignore"):
+        for g, e in zip(grads, efs):
+            gc = np.asarray(g, np.float32) + np.asarray(e, np.float32)
+            fp = np.zeros(kp, np.float32)
+            fp[:size] = gc.reshape(-1)
+            q, s = F.mx_quantize_np(fp, mx)
+            deq = F.mx_dequantize_np(q, s, mx).astype(np.float32)
+            ne = (fp - deq)[:size].reshape(shape)
+            if not np.all(np.isfinite(ne)):
+                ne = np.zeros_like(ne)
+            deqs.append(deq)
+            new_efs.append(ne)
+        mean = (np.sum(np.stack(deqs).astype(np.float64), axis=0)
+                / len(grads)).astype(np.float32)
+    return mean[:size].reshape(shape), new_efs
+
+
+def mx_dispatch_wire_ref(x, *, mx):
+    """Numpy oracle for one hop of the MoE packed dispatch wire: MX
+    quantize over groups along the last axis (numpy mirrors, NaN-scale
+    poison included), dequantize.  The all-to-all itself is a block
+    permutation — bytes move, values don't — so the wire's value
+    transform is exactly this roundtrip, and tests compare the on-mesh
+    ``mx_dispatch_a2a`` output against the permuted roundtrip."""
+    mx = get_mx_format(mx)
+    with np.errstate(invalid="ignore", over="ignore"):
+        q, s = F.mx_quantize_np(np.asarray(x, np.float32), mx)
+        return F.mx_dequantize_np(q, s, mx).astype(np.float32)
 
 
 def mx_flash_attention_ref(q, k, v, *, mx_k, mx_v=None, causal=True):

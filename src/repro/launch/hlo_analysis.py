@@ -340,6 +340,10 @@ def policy_packed_footprint(policy) -> dict:
             # attention KV tiles stream packed through the flash sweep
             # and double as the backward residuals (DESIGN.md §11)
             "attn_kv": pol.mx_attn_name,
+            # the two remaining inter-chip wires (DESIGN.md §13): the
+            # compressed DP gradient reduction and the MoE dispatch a2a
+            "dp_grad": pol.mx_dp_grad,
+            "moe_a2a": pol.mx_fwd,
         }
         out["operands"] = {r: get_mx_format(n).packed_bytes_per_element
                            for r, n in roles.items()}
@@ -355,13 +359,17 @@ def policy_packed_footprint(policy) -> dict:
         out["operands"] = {"fwd_act": bpe_f, "fwd_w": bpe_f,
                            "dgrad_grad": bpe_b, "dgrad_w": bpe_f,
                            "wgrad_act": bpe_f, "wgrad_grad": bpe_b,
-                           "attn_kv": bpe_c}
+                           "attn_kv": bpe_c,
+                           # per-leaf fp8 DP wire (one f32 scale/leaf);
+                           # dispatch a2a stays at carrier width
+                           "dp_grad": 1.0, "moe_a2a": bpe_c}
         out["residual_bpe"] = bpe_f
     else:
         bpe = float(jnp.dtype(pol.compute_dtype).itemsize)
         out["operands"] = {r: bpe for r in
                            ("fwd_act", "fwd_w", "dgrad_grad", "dgrad_w",
-                            "wgrad_act", "wgrad_grad", "attn_kv")}
+                            "wgrad_act", "wgrad_grad", "attn_kv",
+                            "dp_grad", "moe_a2a")}
         out["residual_bpe"] = bpe
     out["fwd_wire_fraction_vs_bf16"] = out["operands"]["fwd_act"] / 2.0
     return out
@@ -375,7 +383,8 @@ def format_packed_footprint(policy) -> str:
     lines = [f"[{fp['policy']}] packed operand footprint (bytes/element; "
              f"bf16 baseline = 2.0):"]
     for role in ("fwd_act", "fwd_w", "dgrad_grad", "dgrad_w",
-                 "wgrad_act", "wgrad_grad", "attn_kv"):
+                 "wgrad_act", "wgrad_grad", "attn_kv", "dp_grad",
+                 "moe_a2a"):
         lines.append(f"  {role:<11} {ops_[role]:.5f}")
     lines.append(f"  residual    {fp['residual_bpe']:.5f}  "
                  f"(activation payload saved for wgrad)")

@@ -21,10 +21,33 @@ import functools
 from ..compat import shard_map
 from jax.sharding import PartitionSpec as P
 
+from ..core.formats import get_mx_format
 from ..core.linear import linear
 from . import layers
 
 __all__ = ["init_moe", "moe_ffn"]
+
+
+def _ep_capacity(cfg, t_loc: int, e_pad: int) -> int:
+    """Per-expert buffer capacity on the EP path.  Clamped to the local
+    token supply (``t_loc * k`` routes exist in total — a capacity above
+    that only allocates dispatch buffer that can never fill, which for
+    large ``capacity_factor`` made the a2a buffers *bigger* than the
+    token stream they carry)."""
+    c = int(cfg.top_k * t_loc * cfg.capacity_factor / e_pad)
+    return max(8, min(c, t_loc * cfg.top_k))
+
+
+def _aux_metrics(loss, keep, cap, axis=None, ba=()):
+    """The aux dict both MoE paths return: the router load-balancing
+    ``loss`` (what the trainer adds to CE), the realized ``drop_frac``
+    (fraction of (token, k) routes beyond capacity — the observable the
+    capacity clamp trades against), and the ``capacity`` itself."""
+    drop = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    if axis is not None:
+        drop = jax.lax.pmean(jax.lax.pmean(drop, axis), ba)
+    return {"loss": loss, "drop_frac": drop,
+            "capacity": jnp.float32(cap)}
 
 
 def _ep_applicable(x, cfg, rules):
@@ -48,9 +71,10 @@ def moe_ffn_ep(x, p, cfg, policy, *, rules, impl="auto"):
 
     Tokens are batch-sharded; experts are sharded over the ``model`` axis
     (padded to a multiple of it). Each shard routes its own tokens, sorts
-    them by expert, ships capacity-bounded bf16 buffers with ONE
-    all-to-all, runs its local experts, and ships results back with a
-    second all-to-all. No GSPMD resharding of the dispatch tensors can
+    them by expert, ships capacity-bounded buffers — packed MX payloads +
+    E8M0 group grids under MX policies (DESIGN.md §13), carrier bf16
+    otherwise — with ONE all-to-all, runs its local experts, and ships
+    results back with a second all-to-all. No GSPMD resharding of the dispatch tensors can
     occur — this replaces the O(10 TB) gather/AR storm the einsum dispatch
     generates at 256 chips.
     """
@@ -73,9 +97,23 @@ def moe_ffn_ep(x, p, cfg, policy, *, rules, impl="auto"):
     for a in ba:
         dp *= mesh.shape[a]
     t_loc = (b // dp) * s
-    cap = max(8, int(k * t_loc * cfg.capacity_factor / e_pad))
+    cap = _ep_capacity(cfg, t_loc, e_pad)
     manual = manual | {rules.fsdp_axis}
-    from ..parallel.tp_gemm import make_fsdp_gather
+    from ..parallel.tp_gemm import make_fsdp_gather, mx_dispatch_a2a
+    # packed dispatch wire (DESIGN.md §13): MX policies ship both
+    # dispatch a2as as codec payloads + E8M0 grids over groups of 32
+    # along d_model — activations in the forward element format, the
+    # dispatch cotangent in the backward one.  Misaligned d_model keeps
+    # the raw carrier a2a (the grid would cut a group).
+    mx_fwd = get_mx_format(policy.mx_fwd) if policy.mx else None
+    mx_bwd = get_mx_format(policy.mx_bwd_name) if policy.mx else None
+    use_mx_wire = mx_fwd is not None and d % mx_fwd.group == 0
+
+    def dispatch_a2a(buf):
+        if use_mx_wire:
+            return mx_dispatch_a2a(buf, axis, mx_fwd, mx_bwd)
+        return jax.lax.all_to_all(buf, axis, split_axis=0, concat_axis=0,
+                                  tiled=True)
     # w_gate/w_up are [E, D(fsdp), F]; w_out is [E, F, D(fsdp)]
     fsdp_gather1 = make_fsdp_gather(rules, dim=1)
     fsdp_gather2 = make_fsdp_gather(rules, dim=2)
@@ -124,8 +162,7 @@ def moe_ffn_ep(x, p, cfg, policy, *, rules, impl="auto"):
                          ).at[slot].set(xt[tok_of])[:-1]
         # ship to expert shards: [tp, epl*cap, d] -> a2a -> local experts
         send = send.reshape(tp, epl * cap, d)
-        recv = jax.lax.all_to_all(send, axis, split_axis=0, concat_axis=0,
-                                  tiled=True)
+        recv = dispatch_a2a(send)
         buf = recv.reshape(tp, epl, cap, d).transpose(1, 0, 2, 3) \
                   .reshape(epl, tp * cap, d)
 
@@ -138,15 +175,15 @@ def moe_ffn_ep(x, p, cfg, policy, *, rules, impl="auto"):
         out = jax.vmap(expert)(buf, wgl, wul, wol)
         out = out.reshape(epl, tp, cap, d).transpose(1, 0, 2, 3) \
                  .reshape(tp, epl * cap, d)
-        back = jax.lax.all_to_all(out, axis, split_axis=0, concat_axis=0,
-                                  tiled=True)
+        back = dispatch_a2a(out)
         flat_out = back.reshape(e_pad * cap, d)
         gathered = jnp.where(keep[:, None],
                              flat_out[jnp.where(keep, slot, 0)], 0)
         contrib = gathered * gate.reshape(-1)[order][:, None].astype(xl.dtype)
         yt = jnp.zeros((t, d), jnp.float32).at[tok_of].add(
             contrib.astype(jnp.float32))
-        return yt.astype(xl.dtype).reshape(bl, s, d), aux
+        return (yt.astype(xl.dtype).reshape(bl, s, d),
+                _aux_metrics(aux, keep, cap, axis=axis, ba=ba))
 
     y, aux = ep(x, router, wg, wu, wo)
     if cfg.moe_dense_ff:
@@ -178,9 +215,11 @@ def _capacity(cfg, n_tokens: int) -> int:
 
 
 def moe_ffn(x, p, cfg, policy, *, rules=None, impl="auto"):
-    """x [B,S,D] -> ([B,S,D], aux_loss). Dispatches to the explicit
-    expert-parallel path on multi-device meshes (§Perf G1); the einsum
-    path below is the single-device / reference implementation."""
+    """x [B,S,D] -> ([B,S,D], aux) where ``aux`` is the metrics dict of
+    ``_aux_metrics`` (``aux["loss"]`` is what joins the objective).
+    Dispatches to the explicit expert-parallel path on multi-device
+    meshes (§Perf G1); the einsum path below is the single-device /
+    reference implementation."""
     if _ep_applicable(x, cfg, rules):
         return moe_ffn_ep(x, p, cfg, policy, rules=rules, impl=impl)
     b, s, d = x.shape
@@ -238,4 +277,4 @@ def moe_ffn(x, p, cfg, policy, *, rules=None, impl="auto"):
 
     if cfg.moe_dense_ff:
         y = y + layers.mlp(x, p["dense"], cfg, policy, rules=rules, impl=impl)
-    return y, aux
+    return y, _aux_metrics(aux, keep, cap)

@@ -147,8 +147,9 @@ def _decoder_layer(x, lp, cfg, policy, *, positions, kv_cache=None,
     aux = jnp.zeros((), jnp.float32)
     xn = _gather_seq(L.apply_norm(x, lp["norm2"], cfg), rules, policy)
     if cfg.family == "moe":
-        ff, aux = MOE.moe_ffn(xn, lp["moe"], cfg, policy, rules=rules,
-                              impl=impl)
+        ff, moe_aux = MOE.moe_ffn(xn, lp["moe"], cfg, policy, rules=rules,
+                                  impl=impl)
+        aux = moe_aux["loss"]   # drop_frac/capacity are diagnostics
     else:
         ff = L.mlp(xn, lp["mlp"], cfg, policy, rules=rules, impl=impl)
     x = x + ff

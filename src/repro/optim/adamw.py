@@ -63,17 +63,34 @@ def adamw_init(params, cfg: AdamWConfig):
 
 
 def _stochastic_cast(x_f32, dtype, key):
-    """Stochastic rounding f32 -> dtype (unbiased downcast)."""
+    """Stochastic rounding f32 -> dtype (unbiased downcast).
+
+    The next representable value toward ``x`` is computed sign-aware on
+    the sign/magnitude encoding: incrementing raw bits only walks the
+    value lattice within one sign, and ``lo == -0.0`` (raw 0x8000)
+    decrements straight into the NaN space (0x7FFF) if treated as "a
+    negative number, step the integer".  Split sign bit and magnitude,
+    step the magnitude, and flip the sign when the step crosses zero —
+    updates in (-ulp, 0) land on -0.0 and must round toward the first
+    *negative* subnormal, not truncate.
+    """
     lo = x_f32.astype(dtype)
     lof = lo.astype(jnp.float32)
-    # next representable value away from lo, toward x
-    eps = jnp.where(x_f32 >= lof, 1, -1)
-    bits = jax.lax.bitcast_convert_type(lo, jnp.uint16 if dtype in (
-        jnp.bfloat16, jnp.float16) else jnp.uint8)
+    nbits = 16 if dtype in (jnp.bfloat16, jnp.float16) else 8
+    ui = jnp.uint16 if nbits == 16 else jnp.uint8
+    bits = jax.lax.bitcast_convert_type(lo, ui).astype(jnp.int32)
+    sign = bits >> (nbits - 1)
+    mag = bits & ((1 << (nbits - 1)) - 1)
+    up = x_f32 > lof          # step toward +inf (else toward -inf)
+    # magnitude delta for a value-lattice step: +1 if the step moves
+    # away from zero on this sign, -1 if toward zero
+    mag_step = jnp.where(sign == 0, jnp.where(up, 1, -1),
+                         jnp.where(up, -1, 1))
+    nmag = mag + mag_step
+    nsign = jnp.where(nmag < 0, 1 - sign, sign)   # ±0 crossing
+    nmag = jnp.abs(nmag)
     nxt = jax.lax.bitcast_convert_type(
-        (bits.astype(jnp.int32) + jnp.where(
-            bits == 0, 1, eps * jnp.where(lof < 0, -1, 1))).astype(bits.dtype),
-        dtype).astype(jnp.float32)
+        ((nsign << (nbits - 1)) | nmag).astype(ui), dtype).astype(jnp.float32)
     span = nxt - lof
     frac = jnp.where(span != 0, (x_f32 - lof) / jnp.where(span == 0, 1, span),
                      0.0)

@@ -1,16 +1,40 @@
-"""FP8-compressed cross-replica gradient reduction with error feedback.
+"""Compressed cross-replica gradient reduction with error feedback.
 
 The paper's thesis — ship narrow, accumulate wide — applied to the
-*network*: gradients are quantized to FP8-E5M2 (per-leaf scale) before the
-data-parallel reduction, halving/quartering ICI-DCN bytes; partial sums are
-accumulated in f32 (expanding accumulation); the quantization residual is
-carried to the next step (error feedback), which keeps SGD convergence
-unbiased to first order.
+*network*: gradients are quantized before the data-parallel reduction,
+partial sums are accumulated in f32 (expanding accumulation), and the
+quantization residual is carried to the next step (error feedback),
+which keeps SGD convergence unbiased to first order.
+
+Two wire formats (DESIGN.md §13):
+
+* **per-leaf FP8** (legacy): each leaf ships as FP8-E5M2 under a single
+  f32 scale.  One outlier element collapses the whole leaf into the
+  subnormal mud — the exact failure mode the MX sweep measured 2–3
+  orders worse than group-32 scaling.
+* **MX groups** (``mx=`` / ``Policy.mx_dp_grad``): each leaf flattens,
+  pads to whole groups of 32 (the established pad-and-mask convention:
+  zero padding quantizes to zero payload under the neutral scale, so
+  the mean is exact after the slice), and ships as *packed* codec
+  payloads (MXFP6: 0.75 B/elem, MXFP4: 0.5 B/elem) next to a packed
+  E8M0 byte grid (one uint8 per group).  The receive side dequantizes
+  per group (exact — pow2) and accumulates f32 in chunks (Wang et al.
+  1812.08011: chunk-based wide accumulation suffices on the update
+  path), and the per-leaf error feedback absorbs the group residual.
+
+Non-finite convention (both wires): a leaf whose amax is inf/NaN keeps
+a *neutral* scale (per-leaf path) or gets the E8M0 NaN scale poisoning
+its group (MX path), so the non-finite values reach the reduced output
+and from there the loss-scale/finite-guard skip — instead of an ``inf``
+scale zero-laundering the payload.  An error-feedback leaf that picked
+up non-finite residual is reset to zero rather than carried: EF state
+must never poison future (finite) steps.
 
 Built on shard_map so the collective is explicit: used by the DDP-style
-trainer variant and by the cross-pod stage of the hierarchical reduction
-(within-pod reductions stay full precision — they're cheap on ICI; the
-pod axis is the slow hop that benefits).
+trainer variant (``make_train_step(dp_compress=True)``) and by the
+cross-pod stage of the hierarchical reduction (within-pod reductions
+stay full precision — they're cheap on ICI; the pod axis is the slow
+hop that benefits).
 """
 from __future__ import annotations
 
@@ -22,7 +46,14 @@ import jax.numpy as jnp
 from ..compat import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
-__all__ = ["compressed_psum_mean", "error_feedback_init"]
+from ..core.formats import get_mx_format
+# the one quantize/dequantize implementation every explicit wire shares
+# (payload in the element format's native byte dtype or packed codec
+# lanes, E8M0 byte grids, NaN-scale poison) — DESIGN.md §9/§13
+from ..parallel.tp_gemm import _deq_mx, _quant_mx
+
+__all__ = ["compressed_psum_mean", "error_feedback_init",
+           "dp_wire_bytes_per_step"]
 
 
 def error_feedback_init(grads):
@@ -32,33 +63,92 @@ def error_feedback_init(grads):
 def _quantize_leaf(g, q_dtype):
     amax = jnp.max(jnp.abs(g))
     maxn = jnp.float32(jnp.finfo(q_dtype).max)
-    s = jnp.where(amax > 0, amax / maxn, 1.0)
+    # non-finite amax -> scale 1: inf/NaN propagate to the loss-scale
+    # skip instead of an inf scale flushing the payload to zero and
+    # NaN-poisoning the error feedback (matches _quant_local/_a2a_sum
+    # in parallel/tp_gemm.py)
+    s = jnp.where((amax > 0) & jnp.isfinite(amax), amax / maxn, 1.0)
     return (g / s).astype(q_dtype), s
 
 
+def _reset_nonfinite_ef(e):
+    """Error feedback must stay finite: a residual computed from inf/NaN
+    gradients (inf - NaN = NaN) would otherwise re-poison every later
+    step after the bad batch is long gone.  The poisoned *wire* output
+    still reaches the skip logic this step; only the carried state is
+    scrubbed."""
+    return jnp.where(jnp.all(jnp.isfinite(e)), e, jnp.zeros_like(e))
+
+
+def _chunked_sum(x, chunk: int):
+    """Sum ``x[n, ...]`` over axis 0 in f32, ``chunk`` sources at a time
+    (partials of partials — the 1812.08011 chunk-based accumulation
+    structure, carried wide).  ``n`` is static inside shard_map, so the
+    chunk loop unrolls at trace time."""
+    n = x.shape[0]
+    parts = [jnp.sum(x[i:i + chunk].astype(jnp.float32), axis=0)
+             for i in range(0, n, chunk)]
+    acc = parts[0]
+    for p in parts[1:]:
+        acc = acc + p
+    return acc
+
+
+def _leaf_mx(g, e, mx, axis, n, chunk):
+    """One leaf over the MX wire: flatten → pad to whole groups →
+    packed payload + E8M0 byte grid all-gather → per-group dequant →
+    chunked f32 accumulation → slice the padding back off."""
+    gc = g.astype(jnp.float32) + e
+    flat = gc.reshape(-1)
+    size = flat.shape[0]
+    kp = -(-size // mx.group) * mx.group
+    fp = jnp.pad(flat, (0, kp - size))
+    q, s8 = _quant_mx(fp, mx)                   # packed bytes + u8 codes
+    deq = _deq_mx(q, s8, mx)
+    new_e = _reset_nonfinite_ef((fp - deq)[:size].reshape(g.shape))
+    qs = jax.lax.all_gather(q, axis)            # [n, kp*w/8] narrow wire
+    ss = jax.lax.all_gather(s8, axis)           # [n, kp/group] E8M0 bytes
+    red = _chunked_sum(_deq_mx(qs, ss, mx), chunk)
+    return (red / n)[:size].reshape(g.shape), new_e
+
+
+def _leaf_fp8(g, e, q_dtype, axis, n):
+    """One leaf over the legacy per-leaf FP8 wire (single f32 scale)."""
+    gc = g.astype(jnp.float32) + e
+    q, s = _quantize_leaf(gc, q_dtype)
+    new_e = _reset_nonfinite_ef(gc - q.astype(jnp.float32) * s)
+    # narrow all-gather (the compressed wire format), f32 accumulate
+    qs = jax.lax.all_gather(q, axis)            # [n, ...] narrow
+    ss = jax.lax.all_gather(s, axis)            # [n] scales
+    red = jnp.tensordot(ss, qs.astype(jnp.float32), axes=((0,), (0,)))
+    return red / n, new_e
+
+
 def compressed_psum_mean(grads, ef, mesh: Mesh, axis: str,
-                         q_dtype=jnp.float8_e5m2):
+                         q_dtype=jnp.float8_e5m2, mx=None, chunk: int = 4):
     """Mean-reduce ``grads`` over mesh axis ``axis`` in compressed form.
 
-    grads: tree of f32 leaves, identical (replica-local) on every member of
-    ``axis``. ef: error-feedback tree (same shapes, f32). Returns
+    grads: tree of f32 leaves, identical (replica-local) on every member
+    of ``axis``. ef: error-feedback tree (same shapes, f32). Returns
     (reduced_grads_f32, new_ef).
 
-    Inside the shard_map: g+ef is quantized to q_dtype, all-gathered in
-    narrow form, de-quantized and accumulated f32 (expanding accumulation),
-    and the local quantization error becomes the new ef.
+    Inside the shard_map: g+ef is quantized, all-gathered in narrow form
+    (with ``mx`` — an MX format name / ``MXFormat``, typically
+    ``Policy.mx_dp_grad`` — as packed codec payloads + E8M0 byte grids
+    over groups of 32; otherwise as per-leaf FP8 with one f32 scale),
+    de-quantized and accumulated f32 (expanding accumulation; ``chunk``
+    sources per partial on the MX path), and the local quantization
+    error becomes the new ef.  Non-finite gradients propagate to the
+    output (scale-1 / NaN-scale poison conventions); non-finite EF
+    leaves are reset, never carried.
     """
     n = mesh.shape[axis]
+    mxf = get_mx_format(mx) if mx is not None else None
 
     def leaf_fn(g, e):
-        gc = g.astype(jnp.float32) + e
-        q, s = _quantize_leaf(gc, q_dtype)
-        new_e = gc - q.astype(jnp.float32) * s
-        # narrow all-gather (the compressed wire format), f32 accumulate
-        qs = jax.lax.all_gather(q, axis)            # [n, ...] narrow
-        ss = jax.lax.all_gather(s, axis)            # [n] scales
-        red = jnp.tensordot(ss, qs.astype(jnp.float32), axes=((0,), (0,)))
-        return red / n, new_e
+        if mxf is not None:
+            return _leaf_mx(g, e, mxf, axis, n, chunk)
+        return _leaf_fp8(g, e, q_dtype, axis, n)
 
     flat_g, treedef = jax.tree_util.tree_flatten(grads)
     flat_e = jax.tree_util.tree_flatten(ef)[0]
@@ -75,3 +165,22 @@ def compressed_psum_mean(grads, ef, mesh: Mesh, axis: str,
     red, new_ef = run_flat(tuple(flat_g), tuple(flat_e))
     return (jax.tree_util.tree_unflatten(treedef, list(red)),
             jax.tree_util.tree_unflatten(treedef, list(new_ef)))
+
+
+def dp_wire_bytes_per_step(grads, mx=None, q_dtype=jnp.float8_e5m2) -> int:
+    """Bytes one replica ships per step for ``grads`` on the compressed
+    wire: packed payload + E8M0 grid per whole-group-padded leaf (MX),
+    or one narrow element per entry + a 4-byte scale per leaf (FP8).
+    Pure shape math — the honest number the wire-bytes gate tracks."""
+    total = 0
+    if mx is not None:
+        mxf = get_mx_format(mx)
+        w = mxf.elem.width
+        for g in jax.tree.leaves(grads):
+            kp = -(-g.size // mxf.group) * mxf.group
+            total += kp * w // 8 + kp // mxf.group
+    else:
+        bpe = jnp.dtype(q_dtype).itemsize
+        for g in jax.tree.leaves(grads):
+            total += g.size * bpe + 4
+    return total

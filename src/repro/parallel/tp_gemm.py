@@ -43,7 +43,7 @@ from ..kernels.codec import get_codec
 
 __all__ = ["tp_column_linear", "tp_row_linear", "tp_applicable",
            "row_applicable", "make_fsdp_gather", "embed_lookup_ep",
-           "embed_ep_applicable"]
+           "embed_ep_applicable", "mx_dispatch_a2a"]
 
 
 def _quant_local(x, dtype):
@@ -222,6 +222,61 @@ def _a2a_sum(partial_f32, axis, n, dim, wire_dtype=jnp.bfloat16, cfg=None,
     recv = jax.lax.all_to_all(yp, axis, split_axis=dim, concat_axis=dim,
                               tiled=True)
     return jnp.sum(recv.astype(jnp.float32), axis=dim)
+
+
+def _mx_a2a_wire(x, axis, mx):
+    """One packed resharding hop: quantize groups of ``mx.group`` along
+    the last axis, all-to-all payload and E8M0 byte grid over ``axis``
+    (split/concat on axis 0, tiled — the MoE dispatch permutation),
+    dequantize on the receive side.  The a2a splits axis 0 while the
+    groups live on the last axis, so payload ([..., d·w/8] bytes) and
+    grid ([..., d/32] codes) reshard identically and no group is ever
+    cut."""
+    q, s8 = _quant_mx(x, mx)
+    qr = jax.lax.all_to_all(q, axis, split_axis=0, concat_axis=0,
+                            tiled=True)
+    sr = jax.lax.all_to_all(s8, axis, split_axis=0, concat_axis=0,
+                            tiled=True)
+    return _deq_mx(qr, sr, mx)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def mx_dispatch_a2a(x, axis, mx_fwd, mx_bwd):
+    """MoE dispatch all-to-all on the packed MX wire (DESIGN.md §13).
+
+    Reshards ``x[s, ...]`` over mesh axis ``axis`` (split axis 0, concat
+    axis 0, tiled — exactly ``jax.lax.all_to_all``'s dispatch shape) but
+    ships packed codec payloads + E8M0 group grids instead of the
+    carrier tensor: groups of 32 along the last (``d_model``) axis,
+    quantize before the wire, dequantize after.  Not a reduction — each
+    destination receives whole rows — so unlike ``_a2a_sum`` there is no
+    accumulate, just decode.
+
+    ``custom_vjp`` because the packed wire is built from bitcasts and
+    uint8 lane ops autodiff can't see through, and because the backward
+    wire wants its *own* element format: the cotangent rides the reverse
+    all-to-all (the tiled split-0/concat-0 a2a is a block permutation
+    and hence its own transpose) quantized as ``mx_bwd`` — gradients are
+    the range-hungry side, same asymmetry as the GEMM operands.  Callers
+    gate on ``x.shape[-1] % 32 == 0`` and fall back to the raw carrier
+    a2a otherwise.
+    """
+    return _mx_a2a_wire(x, axis, mx_fwd).astype(x.dtype)
+
+
+def _mx_dispatch_fwd(x, axis, mx_fwd, mx_bwd):
+    # residual leaves must be jax values: carry the input dtype as a
+    # zero-size array, not a dtype object
+    return (mx_dispatch_a2a(x, axis, mx_fwd, mx_bwd),
+            jnp.zeros((0,), x.dtype))
+
+
+def _mx_dispatch_bwd(axis, mx_fwd, mx_bwd, proto, g):
+    return (_mx_a2a_wire(g.astype(jnp.float32), axis, mx_bwd)
+            .astype(proto.dtype),)
+
+
+mx_dispatch_a2a.defvjp(_mx_dispatch_fwd, _mx_dispatch_bwd)
 
 
 def _grad_reduce_data(dw_f32, rules, dim: int = 0, mx=None):

@@ -5,6 +5,8 @@ TrainState pytree:
     params     — compute-dtype weights (bf16 under HFP8)
     opt        — AdamW state (master + moments, f32 or narrow)
     lscale     — dynamic loss-scale state (present iff policy.loss_scaling)
+    ef         — error feedback for the compressed DP gradient wire
+                 (present iff dp_compress; DESIGN.md §13)
     rng        — PRNG key (stochastic rounding, future dropout)
 
 The step:
@@ -24,11 +26,13 @@ import jax.numpy as jnp
 from ..core.policy import get_policy
 from ..core.scaling import loss_scale_init, check_and_update_scale
 from ..optim.adamw import AdamWConfig, adamw_init, adamw_update
+from ..optim.grad_compress import compressed_psum_mean, error_feedback_init
 
 __all__ = ["make_train_state", "make_train_step"]
 
 
-def make_train_state(model, key, opt_cfg: AdamWConfig):
+def make_train_state(model, key, opt_cfg: AdamWConfig, *,
+                     dp_compress: bool = False):
     params = model.init(key)
     policy = get_policy(model.cfg.policy_name)
     state = {
@@ -38,12 +42,26 @@ def make_train_state(model, key, opt_cfg: AdamWConfig):
     }
     if policy.loss_scaling:
         state["lscale"] = loss_scale_init()
+    if dp_compress:
+        # per-leaf error feedback for the compressed DP gradient wire
+        # (DESIGN.md §13) — shaped like the grads, carried like opt state
+        state["ef"] = error_feedback_init(params)
     return state
 
 
 def make_train_step(model, opt_cfg: AdamWConfig, *, microbatches: int = 1,
-                    rules=None, impl: str = "auto", remat: bool = True):
+                    rules=None, impl: str = "auto", remat: bool = True,
+                    dp_compress: bool = False):
     policy = get_policy(model.cfg.policy_name)
+    if dp_compress and (rules is None or rules.mesh is None
+                        or not rules.batch_axes):
+        raise ValueError("dp_compress needs mesh rules with a batch axis")
+    # the wire compresses the *slowest* reduction hop: the pod axis when
+    # the mesh has one (cross-pod DCN), else the data axis
+    dp_axis = None
+    if dp_compress:
+        names = rules.mesh.axis_names
+        dp_axis = "pod" if "pod" in names else rules.batch_axes[0]
 
     def train_step(state, tokens, aux=None):
         params = state["params"]
@@ -96,6 +114,22 @@ def make_train_step(model, opt_cfg: AdamWConfig, *, microbatches: int = 1,
             skip = ~finite
             metrics["skipped"] = skip.astype(jnp.int32)
 
+        new_ef = None
+        if dp_compress:
+            # compressed DP mean over the slow axis (post-unscale so the
+            # wire sees true-magnitude grads).  Wire poison — NaN-scale
+            # groups from a non-finite leaf — must reach the skip, so
+            # re-check finiteness after the reduction and OR it in; the
+            # EF reset inside the wire keeps next step's state clean.
+            grads, new_ef = compressed_psum_mean(
+                grads, state["ef"], rules.mesh, dp_axis,
+                mx=policy.mx_dp_grad or None)
+            finite = jnp.array(True)
+            for g in jax.tree.leaves(grads):
+                finite &= jnp.all(jnp.isfinite(g))
+            skip = skip | ~finite
+            metrics["skipped"] = skip.astype(jnp.int32)
+
         rng = jax.random.wrap_key_data(state["rng"])
         rng, sub = jax.random.split(rng)
         newp, new_opt, opt_metrics = adamw_update(
@@ -108,6 +142,8 @@ def make_train_step(model, opt_cfg: AdamWConfig, *, microbatches: int = 1,
                      "rng": jax.random.key_data(rng)}
         if new_ls is not None:
             new_state["lscale"] = new_ls
+        if new_ef is not None:
+            new_state["ef"] = new_ef
         return new_state, metrics
 
     return train_step

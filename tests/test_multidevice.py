@@ -357,10 +357,257 @@ def test_moe_ep_matches_reference():
         np.testing.assert_allclose(np.asarray(y_ep, np.float32),
                                    np.asarray(y_ref, np.float32),
                                    rtol=0.05, atol=0.05)
-        assert abs(float(aux_ep) - float(aux_ref)) < 1e-3
+        assert abs(float(aux_ep["loss"]) - float(aux_ref["loss"])) < 1e-3
+        # aux is a metrics dict on both paths; capacity_factor=8 with the
+        # t_loc*k clamp means nothing drops on either
+        for aux in (aux_ref, aux_ep):
+            assert set(aux) == {"loss", "drop_frac", "capacity"}, aux
+            assert float(aux["drop_frac"]) == 0.0, aux
+        # EP capacity is clamped to the local token supply: t_loc=16, k=2
+        assert float(aux_ep["capacity"]) <= 16 * 2, aux_ep
         print("MOEEP_OK")
     """))
     assert "MOEEP_OK" in out
+
+
+def test_mx_dp_wire_bit_exact_vs_oracle_8dev():
+    """The packed MX gradient wire (DESIGN.md §13) on a real 8-way data
+    axis is BIT-EXACT against the numpy oracle: per-source
+    exact-arithmetic operands (span=8 keeps every 8-source f32 partial
+    sum exact) with one poisoned group — reduced mean AND per-source
+    new error feedback match ``compressed_mean_mx_ref`` element for
+    element, NaN poison included."""
+    out = _run(textwrap.dedent("""
+        import os, sys, functools
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        sys.path.insert(0, "tests")
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.compat import make_mesh, shard_map
+        from repro.core.formats import get_mx_format
+        from repro.kernels.ref import compressed_mean_mx_ref
+        from fuzz import exact_mx_operands
+
+        mesh = make_mesh((8,), ("data",))
+        for name in ("mxfp6e3m2", "mxfp4e2m1"):
+            mx = get_mx_format(name)
+            rng = np.random.default_rng(3)
+            a, _ = exact_mx_operands(rng, 8, 256, 1, mx, span=8)
+            g_all = a.astype(np.float32)       # row i = source replica i
+            sh = NamedSharding(mesh, P("data", None))
+            gd = jax.device_put(jnp.asarray(g_all), sh)
+            ed = jax.device_put(jnp.zeros_like(gd), sh)
+
+            @jax.jit
+            @functools.partial(shard_map, mesh=mesh,
+                               in_specs=(P("data", None), P("data", None)),
+                               out_specs=(P("data", None), P("data", None)),
+                               check_vma=False)
+            def run(g, e, mx=mx):
+                from repro.optim.grad_compress import _leaf_mx
+                red, ne = _leaf_mx(g[0], e[0], mx, "data", 8, 4)
+                return red[None], ne[None]
+
+            red, ne = run(gd, ed)
+            want, want_efs = compressed_mean_mx_ref(
+                [g_all[i] for i in range(8)],
+                [np.zeros(256, np.float32)] * 8, mx=name)
+            assert not np.all(np.isfinite(want))   # poison reached output
+            for d in range(8):
+                np.testing.assert_array_equal(
+                    np.asarray(red)[d], want, err_msg=f"{name} red dev{d}")
+                np.testing.assert_array_equal(
+                    np.asarray(ne)[d], want_efs[d],
+                    err_msg=f"{name} ef dev{d}")
+        print("MXDP_ORACLE_OK")
+    """))
+    assert "MXDP_ORACLE_OK" in out
+
+
+def test_mx_dispatch_a2a_bit_exact_vs_oracle():
+    """The MoE packed dispatch wire: fwd AND vjp of ``mx_dispatch_a2a``
+    on a 4-way model axis are bit-exact against the numpy roundtrip
+    oracle composed with the a2a block permutation (tiled split-0 /
+    concat-0: out[i, j] = in[j, i] per row block).  The bwd hop uses
+    the wide bwd format, checked independently."""
+    out = _run(textwrap.dedent("""
+        import os, sys, functools
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        sys.path.insert(0, "tests")
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.compat import make_mesh, shard_map
+        from repro.core.formats import get_mx_format
+        from repro.kernels.ref import mx_dispatch_wire_ref
+        from repro.parallel.tp_gemm import mx_dispatch_a2a
+        from fuzz import exact_mx_operands
+
+        tp, R, d = 4, 8, 64
+        mx_f, mx_b = "mxfp6e3m2", "mxfp8e5m2"
+        mxf = get_mx_format(mx_f)
+        rng = np.random.default_rng(11)
+        x, _ = exact_mx_operands(rng, tp * tp * R, d, 1, mxf, span=8)
+        g, _ = exact_mx_operands(rng, tp * tp * R, d, 1,
+                                 get_mx_format(mx_b), span=8,
+                                 specials=False)
+        X = x.astype(np.float32).reshape(tp, tp * R, d)
+        G = g.astype(np.float32).reshape(tp, tp * R, d)
+        mesh = make_mesh((tp,), ("model",))
+        sh = NamedSharding(mesh, P("model", None, None))
+        xd = jax.device_put(jnp.asarray(X), sh)
+        gd = jax.device_put(jnp.asarray(G), sh)
+
+        @jax.jit
+        @functools.partial(shard_map, mesh=mesh,
+                           in_specs=(P("model", None, None),) * 2,
+                           out_specs=(P("model", None, None),) * 2,
+                           check_vma=False)
+        def run(xl, gl):
+            y, vjp = jax.vjp(lambda v: mx_dispatch_a2a(
+                v, "model", get_mx_format("mxfp6e3m2"),
+                get_mx_format("mxfp8e5m2")), xl[0])
+            (dx,) = vjp(gl[0])
+            return y[None], dx[None]
+
+        y, dx = run(xd, gd)
+        perm = lambda A: (A.reshape(tp, tp, R, d).transpose(1, 0, 2, 3)
+                          .reshape(tp, tp * R, d))
+        want_y = perm(mx_dispatch_wire_ref(X, mx=mx_f))
+        want_dx = perm(mx_dispatch_wire_ref(G, mx=mx_b))
+        assert not np.all(np.isfinite(want_y))   # poison group survives
+        np.testing.assert_array_equal(np.asarray(y), want_y, err_msg="fwd")
+        np.testing.assert_array_equal(np.asarray(dx), want_dx,
+                                      err_msg="bwd")
+        print("MXA2A_ORACLE_OK")
+    """))
+    assert "MXA2A_ORACLE_OK" in out
+
+
+def test_moe_ep_packed_wire_matches_einsum():
+    """EP MoE with an MX policy routes both dispatch all-to-alls through
+    the packed wire (spied) and still matches the einsum reference
+    within wire-format tolerance; a group-misaligned d_model refuses the
+    wire and falls back to the raw bf16 a2a."""
+    out = _run(textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.compat import make_mesh, set_mesh
+        from repro.configs import ARCHS
+        from repro.core.policy import get_policy
+        from repro.models import moe as MOE
+        import repro.parallel.tp_gemm as TPG
+        from repro.parallel.sharding import make_rules
+
+        cfg = dataclasses.replace(
+            ARCHS["granite-moe-3b-a800m"].reduced(),
+            n_experts=6, top_k=2, capacity_factor=8.0)
+        assert cfg.d_model % 32 == 0    # group-aligned: wire eligible
+        policy = get_policy("mxfp8")
+        rng = np.random.default_rng(0)
+        params = MOE.init_moe(jax.random.key(0), cfg, jnp.bfloat16)
+        x = jnp.asarray(rng.normal(0, 1, (4, 8, cfg.d_model)), jnp.bfloat16)
+        y_ref, aux_ref = jax.jit(lambda p, v: MOE.moe_ffn(
+            v, p, cfg, policy, rules=None, impl="xla"))(params, x)
+
+        mesh = make_mesh((2, 4), ("data", "model"))
+        rules = make_rules(mesh, seq_shard=True)
+        hits = []
+        orig = TPG.mx_dispatch_a2a
+        def spy(*a, **k):
+            hits.append(1)
+            return orig(*a, **k)
+        TPG.mx_dispatch_a2a = spy
+        try:
+            with set_mesh(mesh):
+                y_ep, aux_ep = jax.jit(lambda p, v: MOE.moe_ffn_ep(
+                    v, p, cfg, policy, rules=rules, impl="xla"))(params, x)
+        finally:
+            TPG.mx_dispatch_a2a = orig
+        assert len(hits) >= 2, "both a2a hops should take the packed wire"
+        # the EP path quantizes the dispatch buffer through the wire on
+        # top of the GEMM quantization both paths share -> slightly
+        # wider band than the bf16-wire parity test
+        np.testing.assert_allclose(np.asarray(y_ep, np.float32),
+                                   np.asarray(y_ref, np.float32),
+                                   rtol=0.05, atol=0.12)
+        assert abs(float(aux_ep["loss"]) - float(aux_ref["loss"])) < 2e-3
+        assert float(aux_ep["drop_frac"]) == 0.0, aux_ep
+
+        # misaligned d_model (40 % 32 != 0): bf16 fallback, wire unused
+        cfg_mis = dataclasses.replace(cfg, d_model=40, d_ff=80)
+        params_mis = MOE.init_moe(jax.random.key(1), cfg_mis, jnp.bfloat16)
+        x_mis = jnp.asarray(rng.normal(0, 1, (4, 8, 40)), jnp.bfloat16)
+        hits2 = []
+        TPG.mx_dispatch_a2a = (lambda *a, **k:
+                               (hits2.append(1), orig(*a, **k))[1])
+        try:
+            with set_mesh(mesh):
+                y_mis, _ = jax.jit(lambda p, v: MOE.moe_ffn_ep(
+                    v, p, cfg_mis, policy, rules=rules, impl="xla"))(
+                    params_mis, x_mis)
+        finally:
+            TPG.mx_dispatch_a2a = orig
+        assert not hits2, "misaligned d_model must not take the MX wire"
+        assert np.all(np.isfinite(np.asarray(y_mis, np.float32)))
+        print("MOEMX_OK")
+    """))
+    assert "MOEMX_OK" in out
+
+
+def test_dp_compress_train_step_matches_uncompressed():
+    """``make_train_step(dp_compress=True)`` trains a real mxfp6 model
+    over the compressed DP wire (``Policy.mx_dp_grad`` = mxfp6e3m2):
+    losses track the uncompressed run, nothing skips, and the error
+    feedback picks up the (real, nonzero) quantization residual."""
+    out = _run(textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.compat import make_mesh, set_mesh
+        from repro.configs.base import ModelConfig
+        from repro.models import build_model
+        from repro.optim.adamw import AdamWConfig
+        from repro.parallel.sharding import make_rules
+        from repro.train.train_step import make_train_state, make_train_step
+
+        cfg = ModelConfig(name="dpc", family="dense", n_layers=1,
+            d_model=64, n_heads=2, n_kv_heads=2, d_ff=128,
+            vocab_size=64, head_dim=32, policy_name="mxfp6",
+            attn_q_chunk=32)
+        mesh = make_mesh((4,), ("data",))
+        rules = make_rules(mesh)
+        model = build_model(cfg)
+        opt = AdamWConfig(lr=1e-3, warmup_steps=1, schedule="constant")
+        toks = jnp.asarray(np.random.default_rng(0).integers(0, 64, (4, 32)))
+
+        def losses(dp_compress):
+            state = make_train_state(model, jax.random.key(0), opt,
+                                     dp_compress=dp_compress)
+            step = jax.jit(make_train_step(model, opt, rules=rules,
+                                           impl="xla",
+                                           dp_compress=dp_compress))
+            out = []
+            with set_mesh(mesh):
+                for _ in range(3):
+                    state, m = step(state, toks)
+                    out.append(float(m["loss"]))
+                    assert int(m["skipped"]) == 0
+            return out, state
+
+        lc, sc = losses(True)
+        lu, su = losses(False)
+        assert "ef" in sc and "ef" not in su
+        assert all(np.isfinite(lc)), lc
+        np.testing.assert_allclose(lc, lu, rtol=0.05, atol=0.05)
+        ef_norm = sum(float(jnp.abs(e).sum())
+                      for e in jax.tree.leaves(sc["ef"]))
+        assert ef_norm > 0, "mxfp6 residual should land in the ef tree"
+        print("COMPRESSED", lc, "PLAIN", lu)
+        print("DPC_OK")
+    """))
+    assert "DPC_OK" in out
 
 
 def test_elastic_restore_onto_mesh():
