@@ -1,0 +1,189 @@
+"""Packed-GEMM throughput sweep vs the machine's own roofline
+(EXPERIMENTS.md §gemm_sweep; DESIGN.md §14).
+
+For each (M, K, N) shape × MX format the packed GEMM
+(``ops.mx_gemm_packed`` — the honest-storage path the wire/cache gates
+already cover byte-wise) is timed end to end and scored against an
+*analytic* roofline bound built from two per-run calibrations:
+
+* ``peak_gflops``  — a dense f32 ``jnp.dot`` at the largest swept shape
+  (the same MACs the packed kernel must issue; XLA counts 1 MAC =
+  2 FLOPs, matching ``benchmarks/roofline.py``);
+* ``mem_gbps``     — a device copy of a ~64 MiB buffer (bytes moved =
+  read + write).
+
+Reported per shape×format (``BENCH_gemm.json``):
+
+* ``us``                — median-of-iters wall clock, every iteration
+  synchronized (``autotune.time_us_median``);
+* ``gflops``            — achieved 2·M·N·K / time;
+* ``hbm_gbps``          — achieved packed-operand traffic / time
+  (payload bytes at the format's true width + E8M0 byte grids + f32
+  output — the §10 memory model);
+* ``roofline_fraction`` — bound_time / measured_time where bound_time =
+  max(flops/peak, bytes/bw): the fraction of this machine's own
+  roofline the kernel achieves.  Calibrating per run makes the number
+  machine-relative, so a uniformly slower CI runner moves peak and
+  kernel together and the gate below stays meaningful;
+* ``tiles`` / ``tile_source`` — what the §14 autotune cache holds for
+  the shape (``--tune`` populates it by sweeping; without it a cache
+  miss reports the static heuristic).
+
+This is CI's perf leg: ``--check BASELINE`` fails (exit 1) when any
+quick shape×format's roofline fraction drops >15% below the committed
+``benchmarks/baselines/gemm.json`` (improvements never fail; the
+baseline is refreshed by re-running with ``--out`` onto it).  Absolute
+GFLOPS are informational — only the machine-relative fraction is gated.
+
+Run:
+    PYTHONPATH=src python -m benchmarks.gemm_sweep [--quick] [--tune]
+        [--out BENCH_gemm.json] [--check benchmarks/baselines/gemm.json]
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+import numpy as np
+
+# quick = the CI-gated cells; the full sweep adds the larger shapes and
+# the remaining formats (nightly leg)
+QUICK_SHAPES = [(256, 1024, 256)]
+FULL_SHAPES = [(256, 1024, 256), (512, 2048, 512), (1024, 4096, 1024)]
+QUICK_FORMATS = ["mxfp8e4m3", "mxfp6e2m3", "mxfp4e2m1"]
+FULL_FORMATS = ["mxfp8e4m3", "mxfp8e5m2", "mxfp6e2m3", "mxfp6e3m2",
+                "mxfp4e2m1"]
+GATE_TOL = 1.15        # >15% roofline-fraction regression fails
+
+
+def _measured_impl():
+    """The impl whose wall clock is meaningful on this backend: compiled
+    Pallas on TPU, the XLA reference elsewhere (interpret mode is a
+    Python emulation — its time measures the emulator, not the kernel).
+    Bytes and FLOPs are identical across impls, so the roofline terms
+    are the same either way."""
+    import jax
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def calibrate(quick=False):
+    """Per-run peak GFLOPS (dense f32 dot) + memory GB/s (device copy)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.autotune import time_us_median
+
+    rng = np.random.default_rng(0)
+    n = 512 if quick else 1024
+    a = jnp.asarray(rng.standard_normal((n, n)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((n, n)), jnp.float32)
+    dot = jax.jit(lambda x, y: jnp.dot(x, y,
+                                       preferred_element_type=jnp.float32))
+    us = time_us_median(dot, a, b, warmup=2, iters=5)
+    peak_gflops = 2 * n * n * n / 1e3 / us
+
+    nb = (2 ** 22 if quick else 2 ** 24)   # elements; f32 → 16/64 MiB
+    x = jnp.asarray(rng.standard_normal(nb), jnp.float32)
+    cp = jax.jit(lambda v: v + 1.0)        # read + write every byte
+    us = time_us_median(cp, x, warmup=2, iters=5)
+    mem_gbps = 2 * nb * 4 / 1e3 / us
+    return {"peak_gflops": round(peak_gflops, 2),
+            "mem_gbps": round(mem_gbps, 2)}
+
+
+def _packed_bytes(m: int, n: int, k: int, codec, group: int) -> int:
+    """HBM bytes the packed GEMM moves: payloads at true width, compact
+    E8M0 grids, f32 output."""
+    return (codec.packed_cols(k) * m + codec.packed_cols(k) * n
+            + (k // group) * (m + n)          # E8M0 scale bytes
+            + m * n * 4)                      # f32 output
+
+
+def measure(quick=False, tune=False):
+    import jax.numpy as jnp
+    from repro.core.formats import get_mx_format
+    from repro.kernels import autotune, ops
+    from repro.kernels.codec import get_codec
+
+    impl = _measured_impl()
+    cal = calibrate(quick)
+    shapes = QUICK_SHAPES if quick else FULL_SHAPES
+    formats = QUICK_FORMATS if quick else FULL_FORMATS
+    rng = np.random.default_rng(0)
+    report = {"backend": impl, "calibration": cal, "entries": {}}
+    for m, k, n in shapes:
+        a = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+        b = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+        for fmt in formats:
+            mx = get_mx_format(fmt)
+            codec = get_codec(mx)
+            ap, sa8 = ops.mx_quantize(a, mx=fmt, packed=True, impl="xla")
+            bp, sb8 = ops.mx_quantize(b.T, mx=fmt, packed=True, impl="xla")
+            tune_impl = impl if impl == "pallas" else "pallas_interpret"
+            (tiles, db, res) = autotune.gemm_packed_tiles(
+                m, n, k, mx, mx, impl=tune_impl, sweep=tune, iters=3)
+            run = lambda: ops.mx_gemm_packed(ap, sa8, bp, sb8, mx_a=fmt,
+                                             impl=impl, tiles="auto")
+            us = autotune.time_us_median(run, warmup=1,
+                                         iters=3 if quick else 5)
+            flops = 2 * m * n * k
+            bts = _packed_bytes(m, n, k, codec, mx.group)
+            gflops = flops / 1e3 / us
+            gbps = bts / 1e3 / us
+            # analytic bound on this machine: the slower of compute at
+            # calibrated peak and traffic at calibrated BW
+            bound_us = max(flops / 1e3 / cal["peak_gflops"],
+                           bts / 1e3 / cal["mem_gbps"])
+            report["entries"][f"{m}x{k}x{n}|{fmt}"] = {
+                "us": round(us, 1),
+                "gflops": round(gflops, 2),
+                "hbm_gbps": round(gbps, 3),
+                "roofline_fraction": round(bound_us / us, 4),
+                "tiles": list(tiles) + [int(db)],
+                "tile_source": res.source,
+            }
+    return report
+
+
+def check(report, baseline_path, tol=GATE_TOL):
+    """>15% roofline-fraction regression on any common cell fails."""
+    with open(baseline_path) as f:
+        base = json.load(f)
+    failed = []
+    for key, rec in report["entries"].items():
+        b = base.get("entries", {}).get(key)
+        if b is None:
+            continue
+        floor = b["roofline_fraction"] / tol
+        status = "OK" if rec["roofline_fraction"] >= floor else "REGRESSED"
+        print(f"gemm {key}: roofline {rec['roofline_fraction']:.4f} vs "
+              f"baseline {b['roofline_fraction']:.4f} "
+              f"(floor {floor:.4f}) {status}")
+        if rec["roofline_fraction"] < floor:
+            failed.append(key)
+    return failed
+
+
+def main():
+    args = sys.argv[1:]
+
+    def opt(name, default=None):
+        if name in args:
+            return args[args.index(name) + 1]
+        return default
+
+    report = measure(quick="--quick" in args, tune="--tune" in args)
+    out = opt("--out", "BENCH_gemm.json")
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    print(json.dumps(report, indent=2, sort_keys=True))
+    baseline = opt("--check")
+    if baseline:
+        failed = check(report, baseline)
+        if failed:
+            print(f"gemm perf gate FAILED: {failed}")
+            raise SystemExit(1)
+        print("gemm perf gate passed")
+
+
+if __name__ == "__main__":
+    main()

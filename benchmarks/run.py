@@ -18,14 +18,24 @@ import numpy as np
 
 
 def _time_us(fn, *args, warmup=2, iters=10):
+    """Median wall-clock microseconds of ``fn(*args)``, each iteration
+    synchronized with ``block_until_ready``.
+
+    Timing the loop without per-iteration sync measures dispatch (jax
+    enqueues asynchronously and the queue drains after the clock stops),
+    and the mean lets one scheduler hiccup skew the number — the
+    ``autotune.time_us_median`` convention (EXPERIMENTS.md
+    §Conventions).
+    """
     import jax
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
-    t0 = time.perf_counter()
+    ts = []
     for _ in range(iters):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters * 1e6
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
 
 
 def bench_kernels(quick=False):
@@ -99,6 +109,11 @@ def main() -> None:
     print("## Packed payload pipeline: bytes + accuracy across MXFP8/6/4 (§10)")
     from benchmarks import mx_packed_sweep
     mx_packed_sweep.main(quick)
+    print("=" * 72)
+    print("## Packed GEMM vs the machine's own roofline (§14)")
+    import json as _json
+    from benchmarks import gemm_sweep
+    print(_json.dumps(gemm_sweep.measure(quick), indent=2, sort_keys=True))
     print("=" * 72)
     print("## Serving: paged-cache bytes/seq + decode tok/s per policy (§12)")
     import json as _json

@@ -72,27 +72,48 @@ def _kernel(a_ref, b_ref, sa_ref, sb_ref, o_ref, acc_ref,
 @functools.partial(
     jax.jit,
     static_argnames=("q_dtype_a", "q_dtype_b", "out_dtype",
-                     "block_m", "block_n", "block_k", "interpret"))
+                     "block_m", "block_n", "block_k", "scale_block_m",
+                     "scale_block_n", "scale_block_k", "interpret"))
 def blockscale_gemm_pallas(a: jax.Array, b: jax.Array,
                            sa: jax.Array, sb: jax.Array, *,
                            q_dtype_a, q_dtype_b, out_dtype=jnp.float32,
                            block_m: int = 128, block_n: int = 128,
                            block_k: int = 128,
+                           scale_block_m=None, scale_block_n=None,
+                           scale_block_k=None,
                            interpret: bool = False) -> jax.Array:
     """C = downcast(sum_k (A_ik/sa→q)·(B_kj/sb→q) · sa·sb), fp32 accum.
 
     ``a[M, K]``/``b[K, N]`` are high-precision (fp32/bf16) operands;
-    ``sa[M/bm, K/bk]``/``sb[K/bk, N/bn]`` are per-block dequant scales
-    (f32, from ``core.scaling.compute_block_scales``).  Shapes must be
-    multiples of the block sizes (``ops.py`` pads).
+    ``sa[M/sm, K/sk]``/``sb[K/sk, N/sn]`` are per-block dequant scales
+    (f32, from ``core.scaling.compute_block_scales``).
+
+    Tile-legality contract (DESIGN.md §3/§14): shapes must be multiples
+    of the compute tiles (``ops.py`` pads); ``block_m`` is a sublane
+    8-multiple while ``block_n``/``block_k`` land on lane axes and must
+    be 128-multiples on compiled TPU (interp/CPU CI masks violations —
+    the ``ops.blockscale_blocks`` convention).  The *scale* blocks
+    ``scale_block_*`` (default: the compute tiles — the original
+    kernel) may be coarser than the compute tiles as long as each
+    compute tile sits inside exactly one scale block (``sm % bm == 0``
+    etc., so every (i, kk) step still reads one scalar per operand from
+    SMEM): that is how the §14 autotuner sweeps compute tiles without
+    touching the scale-granularity numerics contract.
     """
+    sm = block_m if scale_block_m is None else scale_block_m
+    sn = block_n if scale_block_n is None else scale_block_n
+    sk = block_k if scale_block_k is None else scale_block_k
+    assert sm % block_m == 0 and sn % block_n == 0 and sk % block_k == 0, (
+        (sm, sn, sk), (block_m, block_n, block_k))
     m, k = a.shape
     k2, n = b.shape
     assert k == k2, (a.shape, b.shape)
     assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0, (
         (m, n, k), (block_m, block_n, block_k))
-    assert sa.shape == (m // block_m, k // block_k), sa.shape
-    assert sb.shape == (k // block_k, n // block_n), sb.shape
+    assert m % sm == 0 and n % sn == 0 and k % sk == 0, ((m, n, k),
+                                                        (sm, sn, sk))
+    assert sa.shape == (m // sm, k // sk), (sa.shape, (m // sm, k // sk))
+    assert sb.shape == (k // sk, n // sn), (sb.shape, (k // sk, n // sn))
     grid = (m // block_m, n // block_n, k // block_k)
     kern = functools.partial(_kernel, q_dtype_a=jnp.dtype(q_dtype_a),
                              q_dtype_b=jnp.dtype(q_dtype_b))
@@ -102,9 +123,13 @@ def blockscale_gemm_pallas(a: jax.Array, b: jax.Array,
         in_specs=[
             pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
             pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
-            pl.BlockSpec((1, 1), lambda i, j, kk: (i, kk),
+            pl.BlockSpec((1, 1),
+                         lambda i, j, kk: (i * block_m // sm,
+                                           kk * block_k // sk),
                          memory_space=pltpu.SMEM),
-            pl.BlockSpec((1, 1), lambda i, j, kk: (kk, j),
+            pl.BlockSpec((1, 1),
+                         lambda i, j, kk: (kk * block_k // sk,
+                                           j * block_n // sn),
                          memory_space=pltpu.SMEM),
         ],
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
@@ -177,9 +202,15 @@ def mx_gemm_pallas(a: jax.Array, b: jax.Array,
     ``sbe[K, N]`` are the per-(row × K-group) / (K-group × column) E8M0
     scales broadcast to element resolution (f32, from
     ``core.scaling.compute_group_scales`` + ``apply_group_scales``-style
-    repeat — ``ops.mx_gemm`` prepares them).  Shapes must be multiples
+    repeat — ``ops.mx_gemm`` prepares them).
+
+    Tile-legality contract (DESIGN.md §8/§14): shapes must be multiples
     of the block sizes and ``block_k`` a multiple of the group
-    (``ops.mx_gemm`` pads).
+    (``ops.mx_gemm`` pads); on compiled TPU ``block_m`` is a sublane
+    8-multiple and ``block_n``/``block_k`` lane 128-multiples
+    (interp/CPU CI masks violations).  Group scales are a property of
+    the operands, not the tiles, so every legal tile choice accumulates
+    the same f32 partials in the same order — bitwise-equal output.
     """
     mx_a = get_mx_format(mx_a)
     mx_b = mx_a if mx_b is None else get_mx_format(mx_b)
@@ -257,24 +288,110 @@ def _mx_packed_gemm_kernel(ap_ref, bp_ref, sa8_ref, sb8_ref, o_ref, acc_ref,
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
+def _mx_packed_gemm_db_kernel(ap_hbm, bp_hbm, sa_hbm, sb_hbm, o_ref,
+                              ap_s, bp_s, sa_s, sb_s, acc_ref, sems,
+                              *, codec_a, codec_b, block_m, block_n,
+                              block_k, nk):
+    """One (i, j) output tile of the *double-buffered* packed MX GEMM
+    (DESIGN.md §14).
+
+    The K loop runs inside the kernel instead of on the grid: the four
+    packed operand streams (A/B payloads + E8M0 code grids) stay in HBM
+    (``memory_space=ANY``) and are copied tile-by-tile into two VMEM
+    slots with explicit async DMAs — the copy for K-tile ``kk+1`` is
+    issued *before* the compute for tile ``kk`` waits on its own copy,
+    so the HBM→VMEM stream of the next packed tile overlaps the
+    unpack/decode/MXU work of the current one.  Compute order, operands
+    and the f32 accumulator update are identical to
+    ``_mx_packed_gemm_kernel``'s grid pipeline, so the result is
+    bitwise equal (tests/test_autotune.py holds it to that).
+    """
+    i, j = pl.program_id(0), pl.program_id(1)
+    bkb_a = codec_a.packed_cols(block_k)
+    bkb_b = codec_b.packed_cols(block_k)
+
+    def dmas(slot, kk):
+        """The four HBM→VMEM copies landing K-tile ``kk`` in ``slot``."""
+        return (
+            pltpu.make_async_copy(
+                ap_hbm.at[pl.ds(i * block_m, block_m),
+                          pl.ds(kk * bkb_a, bkb_a)],
+                ap_s.at[slot], sems.at[0, slot]),
+            pltpu.make_async_copy(
+                bp_hbm.at[pl.ds(j * block_n, block_n),
+                          pl.ds(kk * bkb_b, bkb_b)],
+                bp_s.at[slot], sems.at[1, slot]),
+            pltpu.make_async_copy(
+                sa_hbm.at[pl.ds(i * block_m, block_m),
+                          pl.ds(kk * block_k, block_k)],
+                sa_s.at[slot], sems.at[2, slot]),
+            pltpu.make_async_copy(
+                sb_hbm.at[pl.ds(j * block_n, block_n),
+                          pl.ds(kk * block_k, block_k)],
+                sb_s.at[slot], sems.at[3, slot]),
+        )
+
+    for d in dmas(0, 0):                       # warm-up: first tile inbound
+        d.start()
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def body(kk, carry):
+        cur = jax.lax.rem(kk, 2)
+        nxt = jax.lax.rem(kk + 1, 2)
+
+        @pl.when(kk + 1 < nk)
+        def _prefetch():                       # overlap: next tile inbound
+            for d in dmas(nxt, kk + 1):
+                d.start()
+
+        for d in dmas(cur, kk):                # land the current tile
+            d.wait()
+        # in-register unpack + decode + E8M0 dequant — same fold point,
+        # same accumulation order as the grid-pipelined kernel
+        av = codec_a.decode_lanes(ap_s[cur]) * e8m0_decode(sa_s[cur])
+        bv = codec_b.decode_lanes(bp_s[cur]) * e8m0_decode(sb_s[cur])
+        acc_ref[...] += jax.lax.dot_general(
+            av, bv, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return carry
+
+    jax.lax.fori_loop(0, nk, body, 0)
+    # the single rounding of the whole per-output-tile ExSdotp chain
+    o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("mx_a", "mx_b", "out_dtype",
-                     "block_m", "block_n", "block_k", "interpret"))
+    static_argnames=("mx_a", "mx_b", "out_dtype", "block_m", "block_n",
+                     "block_k", "double_buffer", "interpret"))
 def mx_gemm_packed_pallas(ap: jax.Array, bp: jax.Array,
                           sae8: jax.Array, sbe8: jax.Array, *,
                           mx_a, mx_b=None, out_dtype=jnp.float32,
                           block_m: int = 128, block_n: int = 128,
                           block_k: int = 512,
+                          double_buffer: bool = False,
                           interpret: bool = False) -> jax.Array:
     """C = downcast(sum_k decode(A_p)·sa · (decode(B_p)·sb)^T), fp32 accum.
 
     ``ap[M, K·wa/8]`` / ``bp[N, K·wb/8]`` are packed uint8 payloads (B
     transposed — its groups run along K); ``sae8[M, K]`` / ``sbe8[N, K]``
     are E8M0 scale codes broadcast to element resolution
-    (``ops.mx_gemm_packed`` expands the compact grids and pads).  Shapes
-    must be multiples of the blocks and ``block_k`` a multiple of the
-    group and of both codecs' ``lane_unit``.
+    (``ops.mx_gemm_packed`` expands the compact grids and pads).
+
+    Tile-legality contract (DESIGN.md §10/§14): shapes must be
+    multiples of the blocks; ``block_m`` is a sublane 8-multiple,
+    ``block_n`` a lane 128-multiple, and ``block_k`` a multiple of the
+    MX group *and* of both codecs' ``lane_unit`` (FP8 → 128, FP4 → 256,
+    FP6 → 512 elements), so every packed K-tile is a 128-multiple byte
+    run — the floor the §14 autotuner enumerates candidates above.
+    Interp/CPU CI masks lane violations, same as every packed kernel.
+
+    ``double_buffer=True`` swaps the grid-pipelined K loop for the
+    in-kernel manual-DMA loop (``_mx_packed_gemm_db_kernel``): two VMEM
+    slots per operand stream, the next packed tile's HBM→VMEM copy in
+    flight while the current one multiplies.  Bitwise identical output
+    (same compute order); it needs ≥ 1 K-tile and pays off when the
+    K loop is long enough for the copy/compute overlap to matter.
     """
     mx_a = get_mx_format(mx_a)
     mx_b = mx_a if mx_b is None else get_mx_format(mx_b)
@@ -294,6 +411,29 @@ def mx_gemm_packed_pallas(ap: jax.Array, bp: jax.Array,
     grid = (m // block_m, n // block_n, k // block_k)
     bkb_a = ca.packed_cols(block_k)
     bkb_b = cb.packed_cols(block_k)
+    if double_buffer:
+        nk = k // block_k
+        kern = functools.partial(
+            _mx_packed_gemm_db_kernel, codec_a=ca, codec_b=cb,
+            block_m=block_m, block_n=block_n, block_k=block_k, nk=nk)
+        return pl.pallas_call(
+            kern,
+            grid=(m // block_m, n // block_n),
+            in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)] * 4,
+            out_specs=pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+            scratch_shapes=[
+                pltpu.VMEM((2, block_m, bkb_a), jnp.uint8),
+                pltpu.VMEM((2, block_n, bkb_b), jnp.uint8),
+                pltpu.VMEM((2, block_m, block_k), jnp.uint8),
+                pltpu.VMEM((2, block_n, block_k), jnp.uint8),
+                pltpu.VMEM((block_m, block_n), jnp.float32),
+                pltpu.SemaphoreType.DMA((4, 2)),
+            ],
+            compiler_params=CompilerParams(
+                dimension_semantics=("parallel", "parallel")),
+            interpret=interpret,
+        )(ap, bp, sae8, sbe8)
     kern = functools.partial(_mx_packed_gemm_kernel, codec_a=ca, codec_b=cb)
     return pl.pallas_call(
         kern,

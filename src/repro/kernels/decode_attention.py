@@ -75,10 +75,18 @@ def decode_attention_pallas(q, k, v, lens, *, block_q: int = 8,
                             interpret: bool = False):
     """q [BH, S, hd], k/v [BH, T, hd], lens [BH] -> [BH, S, hd].
 
+    The serving sweep over a carrier-precision cache (DESIGN.md §12).
     q row ``i`` of sequence-head ``b`` attends cache slots
     ``0..lens[b]+i``; slots beyond ``lens[b]+S`` are treated as garbage
     and excluded structurally.  ``debug_visited=True`` additionally
     returns the int32 [BH, S/bq, T/bk] visit grid (page-skip tests).
+
+    Tile-legality contract (DESIGN.md §12/§14): ``block_q`` | S and
+    ``block_k`` | T exactly (positional mask — assert, don't pad).  The
+    decode q axis may fall below the sublane unit, down to ``block_q=1``
+    (S=1 steady-state decode) — interpret/CPU-only below 8; real-TPU
+    serving picks aligned page sizes (``ops.decode_attention_blocks`` /
+    the §14 autotuner, floors 1 and 8).
     """
     bh, s, hd = q.shape
     t = k.shape[1]
@@ -118,7 +126,8 @@ def mx_decode_attention_pallas(q, kp, ks8, vp, vs8, lens, *, mx_k,
                                skip_masked: bool = True,
                                debug_visited: bool = False,
                                interpret: bool = False):
-    """Decode attention straight from the packed paged KV cache.
+    """Decode attention straight from the packed paged KV cache
+    (DESIGN.md §12).
 
     ``q [BH, S, hd]`` carrier precision; ``(kp, ks8)`` / ``(vp, vs8)``
     are the gathered page slots in ``ops.mx_quantize_kv`` layout:
@@ -132,6 +141,10 @@ def mx_decode_attention_pallas(q, kp, ks8, vp, vs8, lens, *, mx_k,
     Bit-exact vs ``ref.mx_decode_attention_ref`` on exact-arithmetic
     operands (``tests/fuzz.exact_decode_operands``) — the same bar as
     every codec kernel.
+
+    Tile-legality contract: as ``decode_attention_pallas`` (§12/§14 —
+    tiles divide S/T exactly, ``block_q`` down to 1 interp-only), plus
+    hd a whole number of groups so the packed byte run is lane-legal.
     """
     mx_k = get_mx_format(mx_k)
     mx_v = mx_k if mx_v is None else get_mx_format(mx_v)

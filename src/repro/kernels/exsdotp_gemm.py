@@ -74,7 +74,13 @@ def exsdotp_gemm_pallas(a: jax.Array, b: jax.Array, scale: jax.Array,
     ``a``/``b`` may be any narrow dtype XLA can upcast (float8_e5m2,
     float8_e4m3, float16, bfloat16). ``scale`` is a (1,1) f32 dequant factor
     (product of the per-tensor quantization scales), fused into the final
-    write. Shapes must be multiples of the block sizes (ops.py pads).
+    write — the paper's ExSdotp structure (DESIGN.md §2): multiply
+    narrow, accumulate f32 across the K grid, round once.
+
+    Tile-legality contract (DESIGN.md §2/§14): shapes must be multiples
+    of the blocks (``ops.exsdotp_gemm`` pads); ``block_m`` is a sublane
+    8-multiple while ``block_n``/``block_k`` land on lane axes and must
+    be 128-multiples on compiled TPU (interp/CPU CI masks violations).
     """
     m, k = a.shape
     k2, n = b.shape

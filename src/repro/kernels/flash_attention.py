@@ -198,10 +198,18 @@ def flash_attention_pallas(q, k, v, *, causal: bool = True,
                            interpret: bool = False):
     """q [BH, S, hd], k/v [BH, T, hd] -> [BH, S, hd] (same dtype as q).
 
+    The carrier-precision online-softmax sweep (DESIGN.md §11).
     ``skip_masked`` enables the causal carry-skip (bit-identical output
     for finite operands).  ``debug_visited=True`` additionally returns
     an int32 [BH, S/bq, T/bk] grid marking which tiles executed the
     sweep body — the interpret-mode hook for the masked-tile tests.
+
+    Tile-legality contract (DESIGN.md §11/§14): ``block_q`` must divide
+    S and ``block_k`` divide T *exactly* — the mask is positional, so
+    this kernel asserts rather than pads; ``ops.attention_blocks`` (or
+    the §14 autotuner, whose candidates divide by construction) picks
+    legal tiles.  On compiled TPU ``block_q`` is a sublane 8-multiple
+    and hd a lane 128-multiple (masked on CPU CI).
     """
     bh, s, hd = q.shape
     t = k.shape[1]
@@ -250,6 +258,13 @@ def mx_flash_attention_pallas(q, kp, ks8, vp, vs8, *, mx_k, mx_v=None,
     Bit-exact vs ``ref.mx_flash_attention_ref`` on exact-arithmetic
     operands (``tests/fuzz.exact_attention_operands``) — the same bar
     every codec kernel meets.
+
+    Tile-legality contract (DESIGN.md §11/§14): ``block_q`` | S and
+    ``block_k`` | T exactly (positional mask — assert, don't pad), hd a
+    whole number of groups; on compiled TPU ``block_q`` is a sublane
+    8-multiple and the packed hd byte run a 128-multiple lane tile
+    (``ops.mx_quantize_kv`` guarantees it for hd % group == 0).  Any
+    legal tile choice is bitwise-equivalent — the §14 autotune axis.
     """
     from ..core.formats import get_mx_format
     mx_k = get_mx_format(mx_k)

@@ -12,6 +12,7 @@ up to block multiples (zero padding is exact for GEMM and for amax).
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +24,7 @@ from ..core.formats import decode, e8m0_decode, e8m0_encode, encode, \
 from ..core.scaling import (BlockScaleConfig, apply_group_scales,
                             compute_block_scales, compute_group_scales,
                             expand_group_scales)
-from . import ref
+from . import autotune, ref
 from .blockscale_gemm import (blockscale_gemm_pallas, mx_gemm_packed_pallas,
                               mx_gemm_pallas)
 from .codec import get_codec
@@ -46,6 +47,22 @@ def resolve_impl(impl: str) -> str:
     if impl == "auto":
         return "pallas" if jax.default_backend() == "tpu" else "xla"
     return impl
+
+
+def _tune_sweep_enabled() -> bool:
+    """Whether ``tiles='auto'`` may *measure* on a cache miss.
+
+    Default: sweep only on a real TPU backend — CPU/interp runs (tests,
+    CI) answer from the committed cache or fall back to the static
+    heuristic, so they stay deterministic and never burn minutes timing
+    interpret-mode kernels.  ``REPRO_TUNE_SWEEP=1`` forces sweeping
+    anywhere (how ``benchmarks/gemm_sweep.py --tune`` populates the
+    committed cache); ``=0`` forbids it even on TPU (DESIGN.md §14).
+    """
+    env = os.environ.get("REPRO_TUNE_SWEEP")
+    if env is not None:
+        return env not in ("", "0")
+    return jax.default_backend() == "tpu"
 
 
 def _pad2(x, bm, bn):
@@ -105,7 +122,8 @@ def blockscale_blocks(m: int, n: int, k: int,
 
 def blockscale_gemm(a: jax.Array, b: jax.Array, *, q_dtype_a, q_dtype_b=None,
                     cfg: BlockScaleConfig = BlockScaleConfig(),
-                    out_dtype=jnp.float32, impl: str = "auto") -> jax.Array:
+                    out_dtype=jnp.float32, impl: str = "auto",
+                    tiles=None) -> jax.Array:
     """Fused block-scaled expanding GEMM (DESIGN.md §3).
 
     Takes *high-precision* ``a[..., M, K]`` / ``b[K, N]`` (fp32/bf16),
@@ -118,6 +136,13 @@ def blockscale_gemm(a: jax.Array, b: jax.Array, *, q_dtype_a, q_dtype_b=None,
     boundary, so sharded leading dims survive into the GEMM (no flatten
     before the xla branch; the Pallas branch flattens payload *and*
     scale grid identically, so granularity is the same across impls).
+
+    ``tiles='auto'`` (DESIGN.md §14) looks up tuned *compute* tiles for
+    the problem from the autotune cache.  The scale grid stays the
+    config's block sizes — candidates only subdivide it (the
+    ``scale_block_*`` mechanism), so quantization granularity and the
+    results are unchanged; the default (``tiles=None``) is the original
+    static heuristic, bit-for-bit.
     """
     impl = resolve_impl(impl)
     q_dtype_b = q_dtype_a if q_dtype_b is None else q_dtype_b
@@ -136,11 +161,20 @@ def blockscale_gemm(a: jax.Array, b: jax.Array, *, q_dtype_a, q_dtype_b=None,
             block_m=bm, block_n=bn, block_k=bk, out_dtype=out_dtype)
     else:
         mp, kp = a.shape[-2], a.shape[-1]
+        cbm, cbn, cbk = bm, bn, bk
+        skw = {}
+        if tiles == "auto":
+            (cbm, cbn, cbk), _ = autotune.blockscale_tiles(
+                math.prod(lead) * mp, b.shape[1], kp, (bm, bn, bk),
+                q_dtype_a, q_dtype_b, impl=impl,
+                sweep=_tune_sweep_enabled())
+            skw = dict(scale_block_m=bm, scale_block_n=bn,
+                       scale_block_k=bk)
         out = blockscale_gemm_pallas(
             a.reshape(-1, kp), b, sa.reshape(-1, sa.shape[-1]), sb,
             q_dtype_a=q_dtype_a, q_dtype_b=q_dtype_b,
-            out_dtype=out_dtype, block_m=bm, block_n=bn, block_k=bk,
-            interpret=(impl == "pallas_interpret"))
+            out_dtype=out_dtype, block_m=cbm, block_n=cbn, block_k=cbk,
+            interpret=(impl == "pallas_interpret"), **skw)
         out = out.reshape(*lead, mp, out.shape[-1])
     return out[..., :m, :n]
 
@@ -271,7 +305,8 @@ def mx_unpack(p: jax.Array, mx, *, k=None) -> jax.Array:
 
 def mx_gemm_packed(ap: jax.Array, sa8: jax.Array, bp: jax.Array,
                    sb8: jax.Array, *, mx_a, mx_b=None,
-                   out_dtype=jnp.float32, impl: str = "auto") -> jax.Array:
+                   out_dtype=jnp.float32, impl: str = "auto",
+                   tiles=None) -> jax.Array:
     """Expanding GEMM straight from packed MX storage (DESIGN.md §10).
 
     ``(ap, sa8)`` is ``mx_quantize(a[..., M, K], packed=True)``;
@@ -288,6 +323,14 @@ def mx_gemm_packed(ap: jax.Array, sa8: jax.Array, bp: jax.Array,
     memory model the wire-byte benchmark measures.  K may be
     group-padded relative to the logical shapes (``mx_quantize`` pads
     ragged K): padded groups contribute exactly zero.
+
+    ``tiles='auto'`` (DESIGN.md §14) replaces the static
+    ``mx_packed_blocks`` heuristic with tuned (block_m, block_n,
+    block_k) tiles *and* the tuned K-loop streaming schedule
+    (grid-pipelined vs double-buffered manual DMA) from the autotune
+    cache.  MX group scales are a property of the layout (groups of 32
+    along K), not of the tile grid, so any tuned choice is bit-exact vs
+    the default on exact-arithmetic operands.
     """
     impl = resolve_impl(impl)
     mx_a = get_mx_format(mx_a)
@@ -308,6 +351,11 @@ def mx_gemm_packed(ap: jax.Array, sa8: jax.Array, bp: jax.Array,
     assert bp.shape == (n, cb.packed_cols(k)), (bp.shape, (n, k))
     assert sb8.shape == (n, k // g), (sb8.shape, (n, k // g))
     bm, bn, bk = mx_packed_blocks(m, n, g, ca, cb)
+    db = False
+    if tiles == "auto":
+        (bm, bn, bk), db, _ = autotune.gemm_packed_tiles(
+            math.prod(lead) * m, n, k, mx_a, mx_b, impl=impl,
+            sweep=_tune_sweep_enabled())
     # scale codes enter the kernel at element resolution (compact grids
     # would be lane-illegal on compiled TPU — the §8 rule, now one u8
     # per element instead of the value-path's f32)
@@ -322,7 +370,7 @@ def mx_gemm_packed(ap: jax.Array, sa8: jax.Array, bp: jax.Array,
     sbe8 = _pad2(sbe8, bn, bk)
     out = mx_gemm_packed_pallas(
         ap2, bp2, sae8, sbe8, mx_a=mx_a, mx_b=mx_b, out_dtype=out_dtype,
-        block_m=bm, block_n=bn, block_k=bk,
+        block_m=bm, block_n=bn, block_k=bk, double_buffer=db,
         interpret=(impl == "pallas_interpret"))
     return out[:ap.reshape(-1, ap.shape[-1]).shape[0], :n].reshape(
         *lead, m, n)
@@ -369,7 +417,8 @@ def mx_flash_attention_packed(q: jax.Array, kp: jax.Array, ks8: jax.Array,
                               vp: jax.Array, vs8: jax.Array, *, mx_k,
                               mx_v=None, causal: bool = True,
                               block_q=None, block_k=None,
-                              impl: str = "auto") -> jax.Array:
+                              impl: str = "auto",
+                              tiles=None) -> jax.Array:
     """Flash attention straight from packed MX KV storage (DESIGN.md
     §11) — the attention analogue of ``mx_gemm_packed``.
 
@@ -380,6 +429,12 @@ def mx_flash_attention_packed(q: jax.Array, kp: jax.Array, ks8: jax.Array,
     — pow2 scales) and runs the straight-softmax reference — identical
     math up to f32 summation order and the online-softmax rescale,
     which exact-arithmetic operands make bitwise equal.
+
+    ``tiles='auto'`` (DESIGN.md §14) replaces the static
+    ``attention_blocks`` tile pick with the tuned (block_q, block_k)
+    from the autotune cache — candidates divide S/T exactly, so the
+    sweep visits the same (query, KV) pairs in the same online-softmax
+    order per q row; explicit ``block_q``/``block_k`` still win.
     """
     from .flash_attention import mx_flash_attention_pallas
     impl = resolve_impl(impl)
@@ -390,9 +445,15 @@ def mx_flash_attention_packed(q: jax.Array, kp: jax.Array, ks8: jax.Array,
         kf = mx_dequantize_packed(kp, ks8, mx_k, k=hd).astype(jnp.float32)
         vf = mx_dequantize_packed(vp, vs8, mx_v, k=hd).astype(jnp.float32)
         return ref.flash_attention_ref(q, kf, vf, causal=causal)
-    blocks = attention_blocks(q.shape[1], kp.shape[1])
-    assert blocks is not None, (q.shape, kp.shape)
-    bq, bk = blocks
+    if tiles == "auto":
+        (bq, bk), _ = autotune.attention_tiles(
+            "mx_flash", q.shape[0], q.shape[1], kp.shape[1], hd,
+            fmt_k=mx_k, fmt_v=mx_v, causal=causal, impl=impl,
+            sweep=_tune_sweep_enabled())
+    else:
+        blocks = attention_blocks(q.shape[1], kp.shape[1])
+        assert blocks is not None, (q.shape, kp.shape)
+        bq, bk = blocks
     return mx_flash_attention_pallas(
         q, kp, ks8, vp, vs8, mx_k=mx_k, mx_v=mx_v, causal=causal,
         block_q=block_q or bq, block_k=block_k or bk,
@@ -419,20 +480,27 @@ def decode_attention_blocks(s: int, t: int) -> tuple[int, int]:
 
 def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                      lens: jax.Array, *, block_q=None, block_k=None,
-                     impl: str = "auto") -> jax.Array:
+                     impl: str = "auto", tiles=None) -> jax.Array:
     """Serving attention over a carrier-precision cache (DESIGN.md §12).
 
     ``q [BH, S, hd]`` rows at absolute slots ``lens + i`` against cache
     ``k/v [BH, T, hd]``; slots beyond the live prefix ``lens + S`` are
     structurally excluded (garbage pages).  Pallas impls run the
     base-offset online-softmax sweep with the page-skip; the xla branch
-    is ``ref.decode_attention_ref`` — identical math.
+    is ``ref.decode_attention_ref`` — identical math.  ``tiles='auto'``
+    swaps the static ``decode_attention_blocks`` pick for the tuned
+    (block_q, block_k) from the autotune cache (DESIGN.md §14).
     """
     from .decode_attention import decode_attention_pallas
     impl = resolve_impl(impl)
     if impl == "xla":
         return ref.decode_attention_ref(q, k, v, lens)
-    bq, bk = decode_attention_blocks(q.shape[1], k.shape[1])
+    if tiles == "auto":
+        (bq, bk), _ = autotune.attention_tiles(
+            "decode", q.shape[0], q.shape[1], k.shape[1], q.shape[-1],
+            impl=impl, sweep=_tune_sweep_enabled())
+    else:
+        bq, bk = decode_attention_blocks(q.shape[1], k.shape[1])
     return decode_attention_pallas(
         q, k, v, lens, block_q=block_q or bq, block_k=block_k or bk,
         interpret=(impl == "pallas_interpret"))
@@ -442,7 +510,7 @@ def mx_decode_attention_packed(q: jax.Array, kp: jax.Array, ks8: jax.Array,
                                vp: jax.Array, vs8: jax.Array,
                                lens: jax.Array, *, mx_k, mx_v=None,
                                block_q=None, block_k=None,
-                               impl: str = "auto") -> jax.Array:
+                               impl: str = "auto", tiles=None) -> jax.Array:
     """Serving attention straight from the packed paged KV cache
     (DESIGN.md §12) — the decode analogue of
     ``mx_flash_attention_packed``.
@@ -454,6 +522,9 @@ def mx_decode_attention_packed(q: jax.Array, kp: jax.Array, ks8: jax.Array,
     — pow2 scales) and runs the masked reference.  Garbage slots beyond
     ``lens + S`` are excluded structurally on every impl, so stale
     NaN-scale poison in freed pages never reaches live rows.
+    ``tiles='auto'`` swaps the static ``decode_attention_blocks`` pick
+    for the tuned (block_q, block_k) from the autotune cache
+    (DESIGN.md §14); explicit ``block_q``/``block_k`` still win.
     """
     from .decode_attention import mx_decode_attention_pallas
     impl = resolve_impl(impl)
@@ -464,7 +535,13 @@ def mx_decode_attention_packed(q: jax.Array, kp: jax.Array, ks8: jax.Array,
         kf = mx_dequantize_packed(kp, ks8, mx_k, k=hd)
         vf = mx_dequantize_packed(vp, vs8, mx_v, k=hd)
         return ref.decode_attention_ref(q, kf, vf, lens)
-    bq, bk = decode_attention_blocks(q.shape[1], kp.shape[1])
+    if tiles == "auto":
+        (bq, bk), _ = autotune.attention_tiles(
+            "mx_decode", q.shape[0], q.shape[1], kp.shape[1], hd,
+            fmt_k=mx_k, fmt_v=mx_v, impl=impl,
+            sweep=_tune_sweep_enabled())
+    else:
+        bq, bk = decode_attention_blocks(q.shape[1], kp.shape[1])
     return mx_decode_attention_pallas(
         q, kp, ks8, vp, vs8, lens, mx_k=mx_k, mx_v=mx_v,
         block_q=block_q or bq, block_k=block_k or bk,
@@ -473,13 +550,14 @@ def mx_decode_attention_packed(q: jax.Array, kp: jax.Array, ks8: jax.Array,
 
 def mx_flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *, mx_k,
                        mx_v=None, causal: bool = True, block_q=None,
-                       block_k=None, impl: str = "auto") -> jax.Array:
+                       block_k=None, impl: str = "auto",
+                       tiles=None) -> jax.Array:
     """Quantized-KV flash attention from high-precision operands:
     ``mx_quantize_kv`` both KV tensors (groups of 32 along hd, E8M0
     scales, packed payloads), then ``mx_flash_attention_packed``.
     q and the online-softmax state stay wide — only the streamed KV
     operands narrow (the forward-path regime of Noune et al.
-    2206.02915).
+    2206.02915).  ``tiles='auto'`` passes through to the packed sweep.
     """
     mx_k = get_mx_format(mx_k)
     mx_v = mx_k if mx_v is None else get_mx_format(mx_v)
@@ -487,7 +565,7 @@ def mx_flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *, mx_k,
     vp, vs8 = mx_quantize_kv(v, mx_v, impl=impl)
     return mx_flash_attention_packed(
         q, kp, ks8, vp, vs8, mx_k=mx_k, mx_v=mx_v, causal=causal,
-        block_q=block_q, block_k=block_k, impl=impl)
+        block_q=block_q, block_k=block_k, impl=impl, tiles=tiles)
 
 
 def mx_dequantize(q: jax.Array, s: jax.Array, mx) -> jax.Array:

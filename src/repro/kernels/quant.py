@@ -60,6 +60,13 @@ def quant_blockwise_pallas(x: jax.Array, *, q_dtype,
     raise it — and sliced back off the payload; fully-padded blocks get
     the neutral scale 1).  ``margin`` < 1 reserves headroom below
     max_normal.
+
+    Tile-legality contract (DESIGN.md §3/§14): ``block_m`` is a sublane
+    8-multiple, ``block_n`` a lane 128-multiple on compiled TPU
+    (interp/CPU CI masks violations).  Blocks ARE the scale granularity
+    here — changing them changes the quantization, so the §14 autotuner
+    never sweeps this kernel's blocks (see ``blockscale_gemm_pallas``'s
+    ``scale_block_*`` for how the GEMM side keeps the grid fixed).
     """
     m, n = x.shape
     pm, pn = (-m) % block_m, (-n) % block_n
@@ -121,9 +128,14 @@ def mx_quant_pallas(x: jax.Array, *, mx, block_m: int = 128,
     Returns ``(q[M, K] f32, scales[M, K/group] f32)``: ``q`` holds the
     element-format values of ``x / s`` (value-space emulation — FP6/FP4
     have no native jnp dtype, so the payload stays f32 on the emulation
-    path) and ``s`` the per-(row × group) E8M0 scales.  Shapes must be
-    multiples of the blocks (``ops.mx_quantize`` pads); ``block_k`` must
-    be a multiple of the group size.
+    path) and ``s`` the per-(row × group) E8M0 scales.
+
+    Tile-legality contract (DESIGN.md §8/§14): shapes must be multiples
+    of the blocks (``ops.mx_quantize`` pads); ``block_k`` must contain
+    whole groups, and on compiled TPU ``block_m`` is a sublane
+    8-multiple / ``block_k`` a lane 128-multiple (interp/CPU CI masks
+    violations).  Scales are per group-of-32 regardless of the tiles,
+    so any legal block choice quantizes identically.
     """
     mx = get_mx_format(mx)
     m, k = x.shape
@@ -186,11 +198,15 @@ def mx_quant_packed_pallas(x: jax.Array, *, mx, block_m: int = 128,
 
     Returns ``(payload[M, K·w/8] u8, s8[M, K/group] u8)``: the densely
     packed element bit patterns and the E8M0 scale codes — the honest
-    HBM footprint, emitted directly by the kernel.  Shapes must be
+    HBM footprint, emitted directly by the kernel.
+
+    Tile-legality contract (DESIGN.md §10/§14): shapes must be
     multiples of the blocks (``ops.mx_quantize`` pads); ``block_k``
     must be a multiple of the group *and* of the codec's ``lane_unit``
     (packed byte runs must be legal 128-multiple lane tiles on compiled
-    TPU — FP8: 128, FP4: 256, FP6: 512; masked on CPU CI).
+    TPU — FP8: 128, FP4: 256, FP6: 512 elements; masked on CPU CI).
+    Group scales are tile-independent, so any legal block choice packs
+    identical bytes.
     """
     mx = get_mx_format(mx)
     codec = get_codec(mx)
